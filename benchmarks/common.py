@@ -1,0 +1,47 @@
+"""Shared benchmark helpers. Every benchmark emits CSV rows
+(name, us_per_call, derived) via ``rows``; ``us_per_call`` is the mean
+virtual-clock (or wall-clock where stated) cost of the benchmarked unit,
+``derived`` a compact metric string tied to the paper artifact."""
+from __future__ import annotations
+
+import time
+
+from repro.core.scheduler import SchedulerConfig
+from repro.serving.costmodel import PIPELINES
+from repro.serving.simulator import run_sim
+from repro.serving.workload import WorkloadConfig
+
+SYSTEMS = {
+    # baseline naming follows the paper (§7.1)
+    "vllm-omni-wo": dict(policy="fcfs", kv_policy="none", preload=False),
+    "vllm-omni": dict(policy="fcfs", kv_policy="lru", preload=False),
+    "liveserve": dict(policy="liveserve"),
+}
+
+
+def sim(model: str, kind: str, *, system: str = "liveserve", c: int = 8,
+        n: int = 24, pbi: float = 0.0, seed: int = 3, gb: float = 4.0,
+        until: float = 2500.0, arrival=None, rate=None, **kw):
+    pipe = PIPELINES[model](kv_capacity_gb=gb)
+    wcfg = dict(kind=kind, num_sessions=n, seed=seed, p_barge_in=pbi)
+    if arrival is None:
+        wcfg["concurrency"] = c
+    else:
+        wcfg.update(arrival=arrival, rate_rps=rate or 2.0)
+    wl = WorkloadConfig(**wcfg)
+    opts = dict(SYSTEMS[system])
+    opts.update(kw)
+    return run_sim(pipe, wl, until=until, **opts)
+
+
+def fmt(v, nd=3):
+    try:
+        return f"{v:.{nd}f}"
+    except (TypeError, ValueError):
+        return str(v)
+
+
+def row(name: str, us_per_call, derived: str) -> str:
+    line = f"{name},{fmt(us_per_call, 1)},{derived}"
+    print(line, flush=True)
+    return line

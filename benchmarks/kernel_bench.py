@@ -1,0 +1,76 @@
+"""Kernel benchmarks: allclose vs oracle + wall time of the jnp oracle
+path on CPU (the Pallas kernels execute in interpret mode here — Mosaic
+timings only exist on real TPUs, so the derived metric reports achieved
+correctness + oracle-path throughput, and the roofline table carries the
+TPU-side projections)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt, row
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick=False):
+    out = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # flash prefill
+    B, Hq, Hkv, S, D = 1, 8, 2, 512, 64
+    q = jax.random.normal(ks[0], (B, Hq, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    got = flash_prefill(q, k, v, causal=True, block_q=128, block_kv=128,
+                        interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = _time(jax.jit(lambda *a: ref.flash_prefill_ref(*a)), q, k, v)
+    flops = 4 * B * Hq * S * S * D
+    out.append(row("kernel/flash_prefill", us,
+                   f"maxerr={err:.2e};oracle_gflops={fmt(flops/us/1e3)}"))
+
+    # paged attention decode
+    B, Hq, Hkv, D, page, pps = 32, 8, 2, 64, 16, 16
+    npages = B * pps + 8
+    q = jax.random.normal(ks[3], (B, Hq, D))
+    kp = jax.random.normal(ks[4], (npages, page, Hkv, D))
+    vp = jax.random.normal(ks[5], (npages, page, Hkv, D))
+    bt = jax.random.permutation(ks[6], npages)[:B * pps].reshape(
+        B, pps).astype(jnp.int32)
+    sl = jnp.full((B,), page * pps - 3, jnp.int32)
+    got = paged_attention(q, kp, vp, bt, sl, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, sl)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = _time(jax.jit(lambda *a: ref.paged_attention_ref(*a)),
+               q, kp, vp, bt, sl)
+    out.append(row("kernel/paged_attention", us,
+                   f"maxerr={err:.2e};kv_bytes={kp.nbytes * 2}"))
+
+    # ssd scan
+    b, l, h, p, n = 1, 512, 4, 64, 128
+    X = jax.random.normal(ks[7], (b, l, h, p)) * 0.5
+    dA = -jnp.abs(jax.random.normal(ks[0], (b, l, h))) * 0.3
+    Bm = jax.random.normal(ks[1], (b, l, h, n)) * 0.5
+    Cm = jax.random.normal(ks[2], (b, l, h, n)) * 0.5
+    Y, st = ssd_scan(X, dA, Bm, Cm, chunk=64, interpret=True)
+    Yr, str_ = ref.ssd_scan_ref(X, dA, Bm, Cm)
+    err = float(jnp.max(jnp.abs(Y - Yr)))
+    us = _time(jax.jit(lambda *a: ref.ssd_scan_ref(*a)[0]), X, dA, Bm, Cm)
+    out.append(row("kernel/ssd_scan", us, f"maxerr={err:.2e};chunk=64"))
+    return out

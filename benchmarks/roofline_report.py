@@ -1,0 +1,43 @@
+"""§Roofline table: reads experiments/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) and prints per-cell roofline terms."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt, row
+
+
+def load(out_dir="experiments/dryrun"):
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(quick=False, out_dir="experiments/dryrun"):
+    out = []
+    for c in load(out_dir):
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c["status"] == "skip":
+            out.append(row(name, 0.0, "SKIP:" + c["reason"][:40]))
+            continue
+        if c["status"] != "ok":
+            out.append(row(name, 0.0, "ERROR:" + c.get("error", "?")[:60]))
+            continue
+        dom_s = max(c["compute_term_s"], c["memory_term_s"],
+                    c["collective_term_s"])
+        uf = c.get("useful_flops_fraction")
+        out.append(row(
+            name, dom_s * 1e6,
+            f"dom={c['dominant']};c={c['compute_term_s']:.2e}"
+            f";m={c['memory_term_s']:.2e}"
+            f";coll={c['collective_term_s']:.2e}"
+            f";useful={fmt(uf) if uf else 'n/a'}"
+            f";peak_gb={c['memory_analysis'].get('peak_memory_in_bytes', 0)/1e9:.1f}"))
+    if not out:
+        out.append(row("roofline/none", 0.0,
+                       "run python -m repro.launch.dryrun first"))
+    return out

@@ -1,0 +1,56 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks sweeps.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import eviction_index, kernel_bench, roofline_report
+    from benchmarks import serving_suite as S
+
+    benches = {
+        "frontier": S.frontier,                      # Fig. 10
+        "tail_latency": S.tail_latency,              # Fig. 11 (left)
+        "continuity": S.continuity,                  # Fig. 11 (right)
+        "arrivals": S.arrivals,                      # Fig. 12
+        "bargein_sensitivity": S.bargein_sensitivity,  # Fig. 13
+        "ablation": S.ablation,                      # Fig. 14
+        "rtf_pacing": S.rtf_pacing,                  # Fig. 15
+        "token_waste": S.token_waste,                # Fig. 16 (left)
+        "reload_path": S.reload_path,                # Fig. 16 (right)
+        "kv_residency": S.kv_residency,              # Fig. 17
+        "continuity_timeline": S.continuity_timeline,  # Fig. 18
+        "eviction_index": eviction_index.run,        # Table 1
+        "kernels": kernel_bench.run,
+        "roofline": roofline_report.run,             # §Roofline
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t1 = time.time()
+        try:
+            fn(quick=args.quick)
+        except Exception as e:                       # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}")
+        print(f"# {name} done in {time.time()-t1:.1f}s", flush=True)
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Paper-figure benchmarks (Figs. 10-18) on the interaction harness.
+
+Each function reproduces one figure's experiment shape at laptop scale:
+the policies under test are the real LiveServe implementation; baselines
+are the substrate behaviors (FCFS + LRU / no-offload)."""
+from __future__ import annotations
+
+from benchmarks.common import SYSTEMS, fmt, row, sim
+from repro.core.scheduler import SchedulerConfig
+from repro.serving.costmodel import PIPELINES
+from repro.serving.simulator import Simulation, run_sim
+from repro.serving.workload import WorkloadConfig
+
+
+def frontier(quick=False):
+    """Fig. 10: throughput-latency frontier, 2 models x 3 workloads."""
+    out = []
+    models = ["qwen3-omni-like"] if quick else list(PIPELINES)
+    kinds = ["sharegpt", "interactive"] if quick else \
+        ["sharegpt", "interactive", "mixed"]
+    cs = [4, 8] if quick else [2, 4, 8, 12, 16]
+    for model in models:
+        for kind in kinds:
+            for system in ("vllm-omni-wo", "vllm-omni", "liveserve"):
+                for c in cs:
+                    m = sim(model, kind, system=system, c=c,
+                            n=4 * c, pbi=0.3)
+                    s = m.summary()
+                    out.append(row(
+                        f"frontier/{model}/{kind}/{system}/c{c}",
+                        s["p90_ttfp"] * 1e6,
+                        f"rps={fmt(s['completed_rps'])}"
+                        f";p90ttfp={fmt(s['p90_ttfp'])}"))
+    return out
+
+
+def tail_latency(quick=False):
+    """Fig. 11 left: TTFP distribution at fixed c=8, no barge-in."""
+    out = []
+    for system in ("vllm-omni", "liveserve"):
+        m = sim("qwen3-omni-like", "sharegpt", system=system, c=8, n=32,
+                gb=2.0)
+        s = m.summary()
+        out.append(row(
+            f"tail_latency/{system}", s["p90_ttfp"] * 1e6,
+            f"p50={fmt(s['p50_ttfp'])};p90={fmt(s['p90_ttfp'])}"
+            f";p95={fmt(s['p95_ttfp'])}"))
+    return out
+
+
+def continuity(quick=False):
+    """Fig. 11 right: playback continuity under concurrency pressure."""
+    out = []
+    for c in ([8, 12] if quick else [8, 12, 16]):
+        for system in ("vllm-omni-wo", "vllm-omni", "liveserve"):
+            m = sim("qwen3-omni-like", "sharegpt", system=system, c=c,
+                    n=3 * c, gb=2.0)
+            out.append(row(
+                f"continuity/{system}/c{c}", m.p90_ttfp() * 1e6,
+                f"continuity={fmt(m.continuity())}"))
+    return out
+
+
+def arrivals(quick=False):
+    """Fig. 12: Poisson vs BurstGPT open-loop arrivals."""
+    out = []
+    for arrival in ("poisson", "burstgpt"):
+        for system in ("vllm-omni", "liveserve"):
+            m = sim("qwen3-omni-like", "sharegpt", system=system,
+                    arrival=arrival, rate=4.0, n=32, gb=2.0)
+            s = m.summary()
+            out.append(row(
+                f"arrivals/{arrival}/{system}", s["p90_ttfp"] * 1e6,
+                f"rps={fmt(s['completed_rps'])}"
+                f";p90ttfp={fmt(s['p90_ttfp'])}"))
+    return out
+
+
+def bargein_sensitivity(quick=False):
+    """Fig. 13: sweep configured barge-in probability."""
+    out = []
+    pbis = [0.0, 0.5, 1.0] if quick else [0.0, 0.3, 0.5, 0.7, 1.0]
+    for pbi in pbis:
+        for system in ("vllm-omni", "liveserve"):
+            m = sim("qwen3-omni-like", "sharegpt", system=system, c=8,
+                    n=32, pbi=pbi)
+            s = m.summary()
+            out.append(row(
+                f"bargein/p{pbi}/{system}", s["p90_ttfp"] * 1e6,
+                f"rps={fmt(s['completed_rps'])}"
+                f";waste={fmt(s['waste_ratio'])}"))
+    return out
+
+
+def ablation(quick=False):
+    """Fig. 14: add components one by one (scheduler / +eviction /
+    +preload), with and without barge-in."""
+    variants = [
+        ("base", dict(policy="fcfs", kv_policy="lru", preload=False)),
+        ("+sched", dict(policy="liveserve", kv_policy="lru",
+                        preload=False)),
+        ("+evict", dict(policy="liveserve", kv_policy="next_use",
+                        preload=False)),
+        ("+preload(full)", dict(policy="liveserve")),
+    ]
+    out = []
+    for pbi in (0.0, 0.5):
+        for name, kw in variants:
+            pipe = PIPELINES["qwen3-omni-like"](kv_capacity_gb=1.5)
+            wl = WorkloadConfig(kind="interactive", num_sessions=24,
+                                concurrency=12, seed=3, p_barge_in=pbi)
+            m = run_sim(pipe, wl, until=2500.0, **kw)
+            s = m.summary()
+            out.append(row(
+                f"ablation/pbi{pbi}/{name}", s["p90_ttfp"] * 1e6,
+                f"rps={fmt(s['completed_rps'])}"
+                f";waste={fmt(s['waste_ratio'])}"
+                f";stall_ms={fmt(s['mean_reload_stall'] * 1000, 1)}"))
+    return out
+
+
+def rtf_pacing(quick=False):
+    """Fig. 15: RTF stays < 1 while generation stretches toward playback."""
+    out = []
+    for system in ("vllm-omni", "liveserve"):
+        m = sim("qwen3-omni-like", "sharegpt", system=system, c=8, n=32,
+                pbi=0.5)
+        s = m.summary()
+        spans = [(t.gen_span_s, t.audio_delivered_s) for t in m.turns
+                 if t.completed and t.audio_delivered_s > 20]
+        stretch = (sum(a / b for a, b in spans) / len(spans)
+                   if spans else float("nan"))
+        out.append(row(
+            f"rtf_pacing/{system}", s["p90_ttfp"] * 1e6,
+            f"p50rtf={fmt(s['p50_rtf'])};p90rtf={fmt(s['p90_rtf'])}"
+            f";genspan_frac={fmt(stretch)}"))
+    return out
+
+
+def token_waste(quick=False):
+    """Fig. 16 left: generated-but-unheard tokens vs barge-in prob."""
+    out = []
+    for pbi in (0.3, 0.7, 1.0):
+        base = sim("qwen3-omni-like", "sharegpt", system="vllm-omni",
+                   c=8, n=32, pbi=pbi).waste_ratio()
+        live = sim("qwen3-omni-like", "sharegpt", system="liveserve",
+                   c=8, n=32, pbi=pbi).waste_ratio()
+        cut = 1 - live / base if base else 0.0
+        out.append(row(
+            f"token_waste/p{pbi}", 0.0,
+            f"baseline={fmt(base)};liveserve={fmt(live)}"
+            f";waste_cut={fmt(cut)}"))
+    return out
+
+
+def reload_path(quick=False):
+    """Fig. 16 right: KV reload on/off the next-turn critical path."""
+    out = []
+    for system in ("vllm-omni", "liveserve"):
+        pipe = PIPELINES["qwen3-omni-like"](kv_capacity_gb=0.75)
+        wl = WorkloadConfig(kind="interactive", num_sessions=24,
+                            concurrency=12, seed=5)
+        s = Simulation(pipe, wl, **SYSTEMS[system])
+        m = s.run(until=2500.0)
+        stalls = [t.reload_stall_s for t in m.turns if t.turn_index > 0]
+        onpath = sum(stalls) / max(1, len(stalls))
+        pre = s.preloaders["thinker"].stats
+        out.append(row(
+            f"reload_path/{system}", onpath * 1e6,
+            f"onpath_ms={fmt(onpath * 1000, 2)}"
+            f";preload_hits={pre.hits};sync={pre.sync_fallbacks}"))
+    return out
+
+
+def kv_residency(quick=False):
+    """Fig. 17: thinker GPU KV residency under KV-aware U2 ordering."""
+    out = []
+    for name, kw in (("kv-unaware", dict(policy="liveserve",
+                                         sched_cfg=SchedulerConfig(
+                                             enable_u2_utility=False))),
+                     ("kv-aware", dict(policy="liveserve"))):
+        pipe = PIPELINES["qwen3-omni-like"](kv_capacity_gb=1.5)
+        wl = WorkloadConfig(kind="interactive", num_sessions=24,
+                            concurrency=12, seed=7)
+        s = Simulation(pipe, wl, **kw)
+        m = s.run(until=2500.0)
+        log = s.kvs["thinker"].residency_log
+        mean_res = (sum(v for _, v in log) / len(log)) if log else 0
+        peak = max((v for _, v in log), default=0)
+        out.append(row(
+            f"kv_residency/{name}", m.p90_ttfp() * 1e6,
+            f"mean_blocks={mean_res:.0f};peak_blocks={peak}"
+            f";rps={fmt(m.completed_rps())}"))
+    return out
+
+
+def continuity_timeline(quick=False):
+    """Fig. 18: continuity under BurstGPT arrivals, with/without barge."""
+    out = []
+    for pbi in (0.0, 0.5):
+        for system in ("vllm-omni", "liveserve"):
+            m = sim("qwen3-omni-like", "sharegpt", system=system,
+                    arrival="burstgpt", rate=6.0, n=32, pbi=pbi, gb=2.0)
+            out.append(row(
+                f"continuity_timeline/pbi{pbi}/{system}",
+                m.p90_ttfp() * 1e6,
+                f"continuity={fmt(m.continuity())}"
+                f";waste={fmt(m.waste_ratio())}"))
+    return out

@@ -1,0 +1,51 @@
+"""End-to-end driver: realtime Omni serving under interactive clients.
+
+Simulated speech clients (VAD, 1x playback, barge-in, multi-turn) against
+the full LiveServe pipeline (thinker -> talker -> vocoder engines with
+urgency scheduling + interaction-aware KV management), compared with the
+vLLM-Omni-style baselines — the laptop-scale version of the paper's §7.
+
+Run:  PYTHONPATH=src python examples/serve_realtime.py [--sessions 32]
+"""
+import argparse
+
+from repro.serving.costmodel import qwen3_omni_like
+from repro.serving.simulator import run_sim
+from repro.serving.workload import WorkloadConfig
+
+SYSTEMS = {
+    "vLLM-Omni-wo": dict(policy="fcfs", kv_policy="none", preload=False),
+    "vLLM-Omni   ": dict(policy="fcfs", kv_policy="lru", preload=False),
+    "LiveServe   ": dict(policy="liveserve"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=32)
+    ap.add_argument("--concurrency", type=int, default=12)
+    ap.add_argument("--barge-in", type=float, default=0.5)
+    ap.add_argument("--workload", default="interactive",
+                    choices=["sharegpt", "interactive", "mixed"])
+    args = ap.parse_args()
+
+    pipe = qwen3_omni_like(kv_capacity_gb=2.0)
+    wl = WorkloadConfig(kind=args.workload, num_sessions=args.sessions,
+                        concurrency=args.concurrency, seed=0,
+                        p_barge_in=args.barge_in)
+    print(f"workload={args.workload} sessions={args.sessions} "
+          f"c={args.concurrency} p_bi={args.barge_in}")
+    print(f"{'system':14s} {'P90 TTFP':>9s} {'contin.':>8s} "
+          f"{'waste':>6s} {'RPS':>6s} {'reload(ms)':>10s}")
+    for name, kw in SYSTEMS.items():
+        m = run_sim(pipe, wl, until=3000.0, **kw)
+        s = m.summary()
+        print(f"{name:14s} {s['p90_ttfp']:8.3f}s {s['continuity']:8.3f} "
+              f"{s['waste_ratio']:6.3f} {s['completed_rps']:6.3f} "
+              f"{s['mean_reload_stall']*1000:10.2f}")
+    print("\n(LiveServe should show lower TTFP, much lower waste, and "
+          "reload moved off the critical path.)")
+
+
+if __name__ == "__main__":
+    main()

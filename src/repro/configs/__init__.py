@@ -1,0 +1,4 @@
+from repro.configs.registry import (  # noqa: F401
+    EncoderConfig, MLAConfig, MoEConfig, ModelConfig, RGLRUConfig, SSMConfig,
+    get_config, list_configs, reduced, register,
+)

@@ -1,0 +1,306 @@
+"""Interaction-aware hierarchical KV cache management (paper §5).
+
+Host-side block accounting over an HBM tier and a DRAM tier:
+
+- Blocks of a session are ordered; HBM always holds a *prefix* range
+  [0, hbm_blocks) and DRAM the suffix — because eviction takes suffix
+  blocks first (§5.1: prefix blocks are shared by future turns and more
+  expensive to reconstruct).
+- Eviction candidates are idle multi-turn sessions ranked by predicted
+  next use  T_next = now + T_play + T_reply  (Eq. 4), farthest first.
+  Sessions with speech-start/barge-in are immediate-reuse and protected.
+- A lazy-deletion heap keeps candidate selection O(log n) (the paper's
+  eviction index, Table 1); ``index_mode='scan'`` reproduces the tail-scan
+  baseline for the microbenchmark.
+- ``policy='lru'`` reproduces the substrate baseline; ``policy='none'``
+  models vLLM-Omni-wo (no offload: eviction discards KV, next turn must
+  re-prefill). Missing monitor telemetry falls back to LRU order
+  (fail-closed, §6).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class SessionKV:
+    session_id: str
+    total_blocks: int = 0        # context blocks cached for the session
+    hbm_blocks: int = 0          # resident prefix range [0, hbm_blocks)
+    pinned: bool = False         # a live request is using this KV
+    protected_until: float = -1.0  # preload protection TTL
+    last_access: float = 0.0
+    discarded: bool = False      # 'none' policy: KV dropped, must re-prefill
+
+    @property
+    def dram_blocks(self) -> int:
+        return self.total_blocks - self.hbm_blocks
+
+    def evictable(self, now: float) -> int:
+        if self.pinned or now < self.protected_until:
+            return 0
+        return self.hbm_blocks
+
+
+@dataclass
+class Transfer:
+    session_id: str
+    blocks: int
+    start: float
+    done: float
+    background: bool
+    cancelled: bool = False
+
+
+class TransferChannel:
+    """Serialized DRAM<->HBM path (PCIe-style shared bandwidth)."""
+
+    def __init__(self, gb_per_s: float, block_bytes: float):
+        self.gb_per_s = gb_per_s
+        self.block_bytes = block_bytes
+        self.busy_until = 0.0
+        self.log: List[Transfer] = []
+
+    def transfer_time(self, blocks: int) -> float:
+        return blocks * self.block_bytes / (self.gb_per_s * 1e9)
+
+    def submit(self, session_id: str, blocks: int, now: float,
+               background: bool) -> Transfer:
+        start = max(now, self.busy_until)
+        done = start + self.transfer_time(blocks)
+        self.busy_until = done
+        t = Transfer(session_id, blocks, start, done, background)
+        self.log.append(t)
+        return t
+
+    def queue_delay(self, now: float) -> float:
+        return max(0.0, self.busy_until - now)
+
+
+class KVManager:
+    def __init__(self, *, capacity_blocks: int, block_size: int,
+                 bytes_per_token: float, monitor=None,
+                 policy: str = "next_use", index_mode: str = "heap",
+                 pcie_gb_s: float = 25.0,
+                 protect_ttl_s: float = 10.0,
+                 protected_cap_blocks: Optional[int] = None,
+                 clock=None):
+        assert policy in ("next_use", "lru", "none")
+        assert index_mode in ("heap", "scan")
+        self.capacity = capacity_blocks
+        self.block_size = block_size
+        self.bytes_per_token = bytes_per_token
+        self.monitor = monitor
+        self.policy = policy
+        self.index_mode = index_mode
+        self.clock = clock
+        self.protect_ttl_s = protect_ttl_s
+        self.protected_cap = protected_cap_blocks or max(
+            1, capacity_blocks // 4)
+        self.sessions: Dict[str, SessionKV] = {}
+        self.channel = TransferChannel(pcie_gb_s,
+                                       block_size * bytes_per_token)
+        # lazy-deletion heap of (-t_next, tiebreak, session_id, version)
+        self._heap: List[Tuple[float, int, str, int]] = []
+        self._version: Dict[str, int] = {}
+        self._tiebreak = itertools.count()
+        # working blocks owned by live requests (decode growth etc.)
+        self.working_blocks = 0
+        # telemetry
+        self.evicted_blocks = 0
+        self.reloaded_blocks = 0
+        self.eviction_overhead_s: List[float] = []
+        self.residency_log: List[Tuple[float, int]] = []
+
+    # ------------------------------------------------------------- state
+    def session(self, sid: str) -> SessionKV:
+        kv = self.sessions.get(sid)
+        if kv is None:
+            kv = SessionKV(session_id=sid)
+            self.sessions[sid] = kv
+        return kv
+
+    @property
+    def used_blocks(self) -> int:
+        return sum(s.hbm_blocks for s in self.sessions.values()) \
+            + self.working_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return self.capacity - self.used_blocks
+
+    def occupancy(self) -> float:
+        """R_{s,occ} of Eq. 3."""
+        return min(1.0, self.used_blocks / max(1, self.capacity))
+
+    def blocks_of(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def log_residency(self, now: float) -> None:
+        self.residency_log.append((now, self.used_blocks))
+
+    # ------------------------------------------------------------- Eq. 4
+    def next_use_estimate(self, sid: str, now: float) -> float:
+        if self.monitor is None:
+            return now                      # fail-closed: behaves like LRU
+        if self.monitor.immediate_reuse(sid):
+            return now                      # immediate reuse: protect
+        t_play = self.monitor.remaining_playback_s(sid)
+        t_reply = self.monitor.reply_gap_s(sid)
+        return now + t_play + t_reply
+
+    def _push_index(self, sid: str, now: float) -> None:
+        t_next = self.next_use_estimate(sid, now)
+        v = self._version.get(sid, 0) + 1
+        self._version[sid] = v
+        heapq.heappush(self._heap, (-t_next, next(self._tiebreak), sid, v))
+
+    def refresh_session(self, sid: str, now: float) -> None:
+        """Re-rank a session after an interaction event."""
+        if self.policy == "next_use" and self.index_mode == "heap":
+            if self.session(sid).evictable(now) > 0:
+                self._push_index(sid, now)
+
+    # ------------------------------------------------------------- order
+    def _candidates_scan(self, now: float) -> List[str]:
+        """Tail-scan baseline: full linear pass, sorted farthest-first."""
+        items = []
+        for sid, kv in self.sessions.items():
+            if kv.evictable(now) <= 0:
+                continue
+            if self.policy == "next_use":
+                key = self.next_use_estimate(sid, now)
+            else:                            # lru: oldest access first
+                key = -kv.last_access
+            items.append((key, sid))
+        items.sort(reverse=True)
+        return [sid for _, sid in items]
+
+    def _pop_heap_candidate(self, now: float) -> Optional[str]:
+        while self._heap:
+            neg_t, _, sid, v = heapq.heappop(self._heap)
+            if self._version.get(sid) != v:
+                continue                     # stale entry (lazy deletion)
+            kv = self.sessions.get(sid)
+            if kv is None or kv.evictable(now) <= 0:
+                continue
+            # protect sessions whose estimate moved to immediate reuse
+            if self.monitor is not None and self.monitor.immediate_reuse(sid):
+                continue
+            return sid
+        return None
+
+    # ------------------------------------------------------------- evict
+    def evict(self, need_blocks: int, now: float) -> int:
+        """Free >= need_blocks from idle resident KV. Returns blocks freed.
+
+        Suffix blocks of the selected session go first; the session's HBM
+        range shrinks from the tail (prefix continuity preserved).
+        """
+        import time as _time
+        t0 = _time.perf_counter()
+        freed = 0
+        if self.policy == "next_use" and self.index_mode == "heap":
+            # seed the heap lazily with any unseen evictable sessions
+            for sid, kv in self.sessions.items():
+                if kv.evictable(now) > 0 and sid not in self._version:
+                    self._push_index(sid, now)
+            while freed < need_blocks:
+                sid = self._pop_heap_candidate(now)
+                if sid is None:
+                    break
+                freed += self._evict_session(sid, need_blocks - freed, now)
+        else:
+            for sid in self._candidates_scan(now):
+                if freed >= need_blocks:
+                    break
+                freed += self._evict_session(sid, need_blocks - freed, now)
+        self.eviction_overhead_s.append(_time.perf_counter() - t0)
+        return freed
+
+    def _evict_session(self, sid: str, want: int, now: float) -> int:
+        kv = self.sessions[sid]
+        take = min(kv.evictable(now), want)
+        if take <= 0:
+            return 0
+        kv.hbm_blocks -= take
+        self.evicted_blocks += take
+        if self.policy == "none":
+            # no offload tier: KV is discarded, next turn re-prefens
+            kv.total_blocks -= take
+            kv.discarded = True
+        if kv.evictable(now) > 0 and self.policy == "next_use" \
+                and self.index_mode == "heap":
+            self._push_index(sid, now)      # partial eviction: re-rank rest
+        return take
+
+    # ------------------------------------------------------------- alloc
+    def try_allocate_working(self, blocks: int, now: float) -> bool:
+        """Blocks for live request growth (pinned until released)."""
+        if self.free_blocks < blocks:
+            self.evict(blocks - self.free_blocks, now)
+        if self.free_blocks < blocks:
+            return False
+        self.working_blocks += blocks
+        return True
+
+    def release_working(self, blocks: int) -> None:
+        self.working_blocks = max(0, self.working_blocks - blocks)
+
+    def pin(self, sid: str) -> None:
+        self.session(sid).pinned = True
+
+    def unpin(self, sid: str, now: float) -> None:
+        kv = self.session(sid)
+        kv.pinned = False
+        kv.last_access = now
+        self.refresh_session(sid, now)
+
+    def commit_turn(self, sid: str, context_tokens: int, now: float) -> None:
+        """After a turn finishes: working KV becomes idle session KV."""
+        kv = self.session(sid)
+        blocks = self.blocks_of(context_tokens)
+        grow = blocks - kv.total_blocks
+        kv.total_blocks = blocks
+        kv.hbm_blocks = min(kv.hbm_blocks + max(0, grow), blocks)
+        kv.pinned = False
+        kv.discarded = False
+        kv.last_access = now
+        self.refresh_session(sid, now)
+
+    # ------------------------------------------------------------- reload
+    def missing_blocks(self, sid: str) -> int:
+        kv = self.session(sid)
+        return kv.dram_blocks
+
+    def recompute_tokens(self, sid: str) -> int:
+        """'none' policy: tokens whose KV was discarded (re-prefill cost)."""
+        kv = self.session(sid)
+        return kv.dram_blocks * self.block_size if kv.discarded else 0
+
+    def reload(self, sid: str, now: float, *, background: bool):
+        """Bring the offloaded suffix back. Returns Transfer or None."""
+        kv = self.session(sid)
+        n = kv.dram_blocks
+        if n <= 0 or self.policy == "none":
+            return None
+        if self.free_blocks < n:
+            self.evict(n - self.free_blocks, now)
+        if self.free_blocks < n:
+            return None
+        t = self.channel.submit(sid, n, now, background)
+        # blocks become resident on completion; account them now so
+        # concurrent admissions see the pressure
+        kv.hbm_blocks += n
+        self.reloaded_blocks += n
+        return t
+
+    def protect(self, sid: str, now: float) -> None:
+        kv = self.session(sid)
+        protected = sum(1 for s in self.sessions.values()
+                        if s.protected_until > now)
+        if protected * self.block_size < self.protected_cap:
+            kv.protected_until = now + self.protect_ttl_s

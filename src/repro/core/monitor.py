@@ -1,0 +1,160 @@
+"""Runtime monitor — the interaction plane (paper §3).
+
+Turns client-side signals (playback progress, speech activity, barge-in)
+into a compact per-session view read by the scheduler and KV manager.
+All fields are optional-by-design: policies that find missing telemetry
+fall back to substrate behavior (fail-closed operation, §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+REPLY_GAP_EMA = 0.3              # weight of newest observation
+
+
+@dataclass
+class PlaybackState:
+    """Client playback as a piecewise timeline.
+
+    ``play_end`` is the wall-clock instant buffered audio runs out;
+    appending audio at time t extends it (opening a gap if t > play_end).
+    """
+    started: bool = False
+    start_time: float = 0.0
+    appended_s: float = 0.0          # total audio delivered to the client
+    play_end: float = 0.0            # when the buffer drains
+    gap_s: float = 0.0               # cumulative stall time
+    max_gap_s: float = 0.0
+    n_gaps: int = 0
+    complete: bool = False           # server finished generating the reply
+
+    def append(self, now: float, dur_s: float) -> None:
+        if not self.started:
+            self.started = True
+            self.start_time = now
+            self.play_end = now
+        elif now > self.play_end:
+            gap = now - self.play_end
+            self.gap_s += gap
+            self.max_gap_s = max(self.max_gap_s, gap)
+            self.n_gaps += 1
+            self.play_end = now
+        self.appended_s += dur_s
+        self.play_end += dur_s
+
+    def buffer_s(self, now: float) -> float:
+        """Playable audio waiting at the client (the P_i^s of audio stages)."""
+        if not self.started:
+            return 0.0
+        return max(0.0, self.play_end - now)
+
+    def consumed_s(self, now: float) -> float:
+        if not self.started:
+            return 0.0
+        return self.appended_s - self.buffer_s(now)
+
+
+@dataclass
+class SessionView:
+    """What the monitor exposes to engine policies."""
+    session_id: str
+    turn_index: int = 0
+    playback: PlaybackState = field(default_factory=PlaybackState)
+    speaking: bool = False
+    speech_start_time: Optional[float] = None
+    barge_in: bool = False           # interruption observed this response
+    playback_end_estimate: Optional[float] = None
+    reply_gap_ema: Optional[float] = None   # user think-time estimate (s)
+    last_playback_end: Optional[float] = None
+    expected_speech_end: Optional[float] = None
+
+
+class RuntimeMonitor:
+    """Tracks live session state; the single source the policies read."""
+
+    def __init__(self, clock, *, workload_reply_gap_prior: float = 2.0):
+        self.clock = clock
+        self.sessions: Dict[str, SessionView] = {}
+        self.reply_gap_prior = workload_reply_gap_prior
+
+    # ----------------------------------------------------------- events
+    def register(self, session_id: str) -> SessionView:
+        view = self.sessions.get(session_id)
+        if view is None:
+            view = SessionView(session_id=session_id)
+            self.sessions[session_id] = view
+        return view
+
+    def on_turn_start(self, session_id: str, turn_index: int) -> None:
+        v = self.register(session_id)
+        v.turn_index = turn_index
+        v.barge_in = False
+        v.playback = PlaybackState()
+
+    def on_audio(self, session_id: str, dur_s: float) -> None:
+        v = self.register(session_id)
+        v.playback.append(self.clock.now(), dur_s)
+
+    def on_response_complete(self, session_id: str) -> None:
+        v = self.register(session_id)
+        v.playback.complete = True
+        v.last_playback_end = max(v.playback.play_end, self.clock.now())
+
+    def on_speech_start(self, session_id: str,
+                        expected_dur_s: Optional[float] = None) -> None:
+        now = self.clock.now()
+        v = self.register(session_id)
+        v.speaking = True
+        v.speech_start_time = now
+        v.expected_speech_end = (now + expected_dur_s
+                                 if expected_dur_s else None)
+        # update think-time EMA: playback end -> speech start
+        if v.last_playback_end is not None and not v.barge_in:
+            gap = max(0.0, now - v.last_playback_end)
+            if v.reply_gap_ema is None:
+                v.reply_gap_ema = gap
+            else:
+                v.reply_gap_ema = ((1 - REPLY_GAP_EMA) * v.reply_gap_ema
+                                   + REPLY_GAP_EMA * gap)
+
+    def on_speech_end(self, session_id: str) -> None:
+        v = self.register(session_id)
+        v.speaking = False
+
+    def on_barge_in(self, session_id: str) -> None:
+        v = self.register(session_id)
+        v.barge_in = True
+        v.speaking = True
+        v.speech_start_time = self.clock.now()
+        v.playback.complete = True
+        v.last_playback_end = self.clock.now()
+
+    # ----------------------------------------------------------- queries
+    def view(self, session_id: str) -> Optional[SessionView]:
+        return self.sessions.get(session_id)
+
+    def playback_buffer_s(self, session_id: str) -> Optional[float]:
+        v = self.sessions.get(session_id)
+        if v is None:
+            return None
+        return v.playback.buffer_s(self.clock.now())
+
+    def remaining_playback_s(self, session_id: str) -> float:
+        """T_play of Eq. 4 — audio still to be heard (buffered only; the
+        paper's fallback uses progress counters when generation is live)."""
+        v = self.sessions.get(session_id)
+        if v is None:
+            return 0.0
+        return v.playback.buffer_s(self.clock.now())
+
+    def reply_gap_s(self, session_id: str) -> float:
+        """T_reply of Eq. 4 — per-session EMA, workload prior fallback."""
+        v = self.sessions.get(session_id)
+        if v is None or v.reply_gap_ema is None:
+            return self.reply_gap_prior
+        return v.reply_gap_ema
+
+    def immediate_reuse(self, session_id: str) -> bool:
+        v = self.sessions.get(session_id)
+        return bool(v and (v.speaking or v.barge_in))

@@ -1,0 +1,120 @@
+"""Speech-triggered KV preloading (paper §5.2).
+
+Speech start / barge-in fire a best-effort background DRAM->HBM preload.
+Admission requires the transfer to hide inside the predicted window before
+LLM-stage execution (remaining utterance + encode delay), under current
+channel pressure. Admitted preloads protect the session KV from eviction
+for a bounded TTL; cancellation or admission failure falls back to the
+synchronous on-path load — latency is affected, correctness never is.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.kv_manager import KVManager, Transfer
+
+
+@dataclass
+class PreloadStats:
+    triggered: int = 0
+    admitted: int = 0
+    skipped: int = 0          # admission check failed
+    cancelled: int = 0
+    hits: int = 0             # next turn found warm KV
+    sync_fallbacks: int = 0
+
+
+@dataclass
+class PendingPreload:
+    session_id: str
+    transfer: Transfer
+    deadline: float
+
+
+class Preloader:
+    def __init__(self, kv: KVManager, monitor, *,
+                 encode_delay_s: float = 0.15,
+                 speech_prior_s: float = 2.0,
+                 safety_margin: float = 0.9,
+                 pressure_cap: float = 0.9,
+                 enabled: bool = True):
+        self.kv = kv
+        self.monitor = monitor
+        self.encode_delay_s = encode_delay_s
+        self.speech_prior_s = speech_prior_s
+        self.safety_margin = safety_margin
+        self.pressure_cap = pressure_cap
+        self.enabled = enabled
+        self.pending: Dict[str, PendingPreload] = {}
+        self.stats = PreloadStats()
+
+    # ------------------------------------------------------------ trigger
+    def on_speech_start(self, sid: str, now: float) -> Optional[Transfer]:
+        """Called on VAD speech-start or barge-in for the session."""
+        if not self.enabled:
+            return None
+        self.stats.triggered += 1
+        # always protect resident KV of a speaking session (§5.2)
+        self.kv.protect(sid, now)
+        self.kv.refresh_session(sid, now)
+        missing = self.kv.missing_blocks(sid)
+        if missing <= 0:
+            return None
+        view = self.monitor.view(sid)
+        if view is not None and view.expected_speech_end is not None:
+            window = max(0.0, view.expected_speech_end - now) \
+                + self.encode_delay_s
+        else:
+            window = self.speech_prior_s + self.encode_delay_s
+        cost = self.kv.channel.transfer_time(missing) \
+            + self.kv.channel.queue_delay(now)
+        if cost > window * self.safety_margin:
+            self.stats.skipped += 1
+            return None
+        # bounded background work (§5.2): never preload into a pool under
+        # pressure — the eviction it would force hurts live requests more
+        # than the hidden transfer helps this one
+        if self.kv.occupancy() > self.pressure_cap \
+                and missing > self.kv.free_blocks:
+            self.stats.skipped += 1
+            return None
+        transfer = self.kv.reload(sid, now, background=True)
+        if transfer is None:
+            self.stats.skipped += 1
+            return None
+        self.stats.admitted += 1
+        self.pending[sid] = PendingPreload(sid, transfer, now + window)
+        return transfer
+
+    def cancel(self, sid: str, now: float) -> None:
+        """Burst pressure: engine cancels background preloads (§6)."""
+        p = self.pending.pop(sid, None)
+        if p is None:
+            return
+        p.transfer.cancelled = True
+        kv = self.kv.session(sid)
+        kv.hbm_blocks = max(0, kv.hbm_blocks - p.transfer.blocks)
+        self.kv.reloaded_blocks -= p.transfer.blocks
+        self.stats.cancelled += 1
+
+    # ------------------------------------------------------------ turn
+    def on_turn_ready(self, sid: str, now: float) -> float:
+        """Next-turn request reached the LLM stage. Returns the on-path
+        reload stall in seconds (0.0 on a warm preload hit)."""
+        p = self.pending.pop(sid, None)
+        if p is not None and not p.transfer.cancelled:
+            if p.transfer.done <= now:
+                self.stats.hits += 1
+                return 0.0
+            # transfer still in flight: wait only the residual
+            self.stats.sync_fallbacks += 1
+            return p.transfer.done - now
+        missing = self.kv.missing_blocks(sid)
+        if missing <= 0 and self.kv.recompute_tokens(sid) == 0:
+            return 0.0
+        transfer = self.kv.reload(sid, now, background=False)
+        if transfer is None:
+            return 0.0                # 'none' policy: engine re-prefills
+        self.stats.sync_fallbacks += 1
+        return transfer.done - now

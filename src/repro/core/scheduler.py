@@ -1,0 +1,166 @@
+"""Interaction-aware request scheduling (paper §4, Algorithm 1).
+
+Urgency classes per scheduling round:
+  U0 playback urgency   — started playback, buffer <= P_safe; sort buffer asc.
+  U1 first-audio        — no first output yet; sort by ready age (FCFS aging).
+  U2 efficiency         — utility U = beta*U_kv - alpha*C_barge (Eqs. 1-3),
+                          sorted descending.
+
+Batch formation scans Concat(U0, U1, U2) against the round budgets
+(token budget + free KV blocks). Fail-closed: a request whose session has
+no playback telemetry classifies as U1 (first-audio path) and missing U2
+utility inputs reduce U2 to ready-age order — matching §6.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.session import Phase, Request
+
+
+@dataclass
+class SchedulerConfig:
+    p_safe_s: float = 1.0            # minimum safe playback buffer (s)
+    p_max_s: float = 3.0             # pacing cap: hold U2 beyond this buffer
+    alpha: float = 1.0               # barge-in exposure weight (Eq. 1)
+    beta: float = 1.0                # KV-pressure relief weight (Eq. 1)
+    enable_urgency: bool = True      # False -> pure FCFS (baseline)
+    enable_u2_utility: bool = True   # False -> U2 by ready age (ablation)
+    enable_pacing: bool = True       # False -> never hold far-ahead work
+    pacing_kv_override: float = 0.9  # KV occupancy beyond which far-ahead
+    #   sessions run anyway (KV-pressure relief beats pacing — the paper's
+    #   alpha/beta tradeoff under memory pressure, §4.1 / Fig. 8)
+
+
+@dataclass
+class RoundBudget:
+    token_budget: int                # prefill+decode tokens this round
+    free_kv_blocks: int              # allocatable KV blocks at this stage
+    max_batch: int = 256
+    block_size: int = 16
+
+    def fits(self, req: Request, chunk: int) -> bool:
+        if self.max_batch <= 0:
+            return False
+        if chunk > self.token_budget:
+            return False
+        need_blocks = -(-chunk // self.block_size)
+        return need_blocks <= self.free_kv_blocks
+
+    def admit(self, req: Request, chunk: int) -> None:
+        self.token_budget -= chunk
+        self.free_kv_blocks -= -(-chunk // self.block_size)
+        self.max_batch -= 1
+
+
+@dataclass
+class ScheduleDecision:
+    batch: List[Request]
+    chunks: dict                     # req_id -> tokens this round
+    classes: dict                    # req_id -> 0/1/2/3 (telemetry/debug)
+    utilities: dict = field(default_factory=dict)
+    held: list = field(default_factory=list)   # (req, buffer) paced out
+
+
+class UrgencyScheduler:
+    """One instance per stage engine (stage-specific buffer estimator)."""
+
+    def __init__(self, cfg: SchedulerConfig, monitor, *,
+                 stage: str,
+                 buffer_estimator: Optional[Callable] = None,
+                 kv_occupancy: Optional[Callable] = None,
+                 kv_of_request: Optional[Callable] = None,
+                 prefill_chunk: int = 512):
+        self.cfg = cfg
+        self.monitor = monitor
+        self.stage = stage
+        self._buffer = buffer_estimator or self._default_buffer
+        self._kv_occ = kv_occupancy or (lambda: 0.0)
+        self._kv_of = kv_of_request or (lambda r: float(r.total_context))
+        self.prefill_chunk = prefill_chunk
+
+    # ------------------------------------------------------------ signals
+    def _default_buffer(self, req: Request) -> Optional[float]:
+        """Stage-aware playback buffer P_i^s (audio stages: client buffer)."""
+        return self.monitor.playback_buffer_s(req.session_id)
+
+    def classify(self, req: Request, now: float):
+        """Returns (class, sort_key, buffer). class 3 = held (pacing)."""
+        cfg = self.cfg
+        buf = self._buffer(req)
+        view = self.monitor.view(req.session_id)
+        started = bool(view and view.playback.started
+                       and not view.playback.complete)
+        if not started or buf is None:
+            # no first playable audio packet yet for this turn (U1), or
+            # telemetry missing (fail-closed -> first-audio path)
+            return 1, now - req.arrival_time, buf
+        if buf <= cfg.p_safe_s:
+            return 0, buf, buf
+        if cfg.enable_pacing and buf > cfg.p_max_s \
+                and self._kv_occ() < cfg.pacing_kv_override:
+            # generation far beyond the playback frontier: delay (§4)
+            return 3, buf, buf
+        return 2, 0.0, buf
+
+    def utility(self, req: Request, buf: Optional[float]) -> float:
+        """Eq. 1: U = beta * U_kv - alpha * C_barge."""
+        cfg = self.cfg
+        if not cfg.enable_u2_utility or buf is None:
+            return 0.0
+        c_barge = max(0.0, buf - cfg.p_safe_s) / max(cfg.p_safe_s, 1e-9)
+        u_kv = self._kv_of(req) * self._kv_occ()
+        return cfg.beta * u_kv - cfg.alpha * c_barge
+
+    # ------------------------------------------------------------ rounds
+    def chunk_for(self, req: Request) -> int:
+        if req.phase == Phase.PREFILL and not req.done_prefill:
+            return min(self.prefill_chunk, req.prompt_len - req.prefilled)
+        return 1                      # decode: one token per round
+
+    def schedule(self, ready: List[Request], budget: RoundBudget,
+                 now: float) -> ScheduleDecision:
+        classes, utilities = {}, {}
+        held = []
+        if not self.cfg.enable_urgency:
+            order = sorted(ready, key=lambda r: (r.arrival_time, r.req_id))
+        else:
+            c0, c1, c2 = [], [], []
+            for r in ready:
+                cls, key, buf = self.classify(r, now)
+                classes[r.req_id] = cls
+                if cls == 0:
+                    c0.append((key, r.req_id, r))
+                elif cls == 1:
+                    c1.append((-key, r.req_id, r))   # oldest first
+                elif cls == 3:
+                    held.append((r, key))            # paced out this round
+                else:
+                    u = self.utility(r, buf)
+                    utilities[r.req_id] = u
+                    c2.append((-u, r.req_id, r))
+            c0.sort(key=lambda t: t[:2])
+            c1.sort(key=lambda t: t[:2])
+            c2.sort(key=lambda t: t[:2])
+            order = [t[2] for t in c0 + c1 + c2]
+
+        batch, chunks = [], {}
+        for r in order:
+            chunk = self.chunk_for(r)
+            if not budget.fits(r, chunk):
+                break                 # Algorithm 1: admission stops
+            budget.admit(r, chunk)
+            batch.append(r)
+            chunks[r.req_id] = chunk
+            r.last_scheduled = now
+        return ScheduleDecision(batch=batch, chunks=chunks, classes=classes,
+                                utilities=utilities, held=held)
+
+
+class FCFSScheduler(UrgencyScheduler):
+    """Baseline: vLLM-Omni default ordering."""
+
+    def __init__(self, monitor, *, stage: str, **kw):
+        super().__init__(SchedulerConfig(enable_urgency=False), monitor,
+                         stage=stage, **kw)

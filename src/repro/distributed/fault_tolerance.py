@@ -1,0 +1,83 @@
+"""Fault tolerance & elasticity for 1000+-node operation (DESIGN.md §7).
+
+- ``run_resilient``: checkpoint/restart supervisor — the training driver
+  restarts from the last atomic checkpoint after a (simulated or real)
+  failure; the paper-scale deployment maps each restart onto a fresh
+  jax.distributed initialization.
+- ``elastic_rescale``: rebuild the mesh with fewer/more data-parallel
+  replicas and re-place checkpointed state onto it (host-side numpy ->
+  device_put with the new shardings). Batch is re-sharded by the next
+  step's in_shardings; optimizer state follows param specs.
+- ``StragglerMitigator``: per-round deadline tracking for the serving
+  engines / data loaders — a round exceeding ``deadline_factor`` x the
+  rolling median marks the source straggling; callers shrink the next
+  round or re-route (the serving engine drops the straggler's request to
+  the next round instead of blocking the batch).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+
+
+def run_resilient(train_once: Callable[[int], int], *, max_restarts: int = 3,
+                  on_failure: Optional[Callable] = None) -> int:
+    """Run ``train_once(start_step) -> last_step`` with restart-on-failure.
+
+    ``train_once`` is expected to checkpoint; a raised exception triggers
+    restore-from-latest and retry (the checkpoint/restart contract).
+    """
+    restarts = 0
+    start = 0
+    while True:
+        try:
+            return train_once(start)
+        except Exception as e:           # noqa: BLE001 — supervisor
+            restarts += 1
+            if on_failure is not None:
+                start = on_failure(e, restarts)
+            if restarts > max_restarts:
+                raise
+
+
+def elastic_rescale(ckpt_dir: str, make_mesh: Callable[[], "jax.sharding.Mesh"],
+                    make_shardings: Callable):
+    """Restore the latest checkpoint onto a rebuilt (resized) mesh.
+
+    ``make_shardings(mesh, tree_shapes) -> pytree of NamedSharding``.
+    Returns (tree, step, mesh).
+    """
+    tree_host, step = restore_checkpoint(ckpt_dir)
+    mesh = make_mesh()
+    shardings = make_shardings(mesh, tree_host)
+    tree, step = restore_checkpoint(ckpt_dir, step, shardings=shardings)
+    return tree, step, mesh
+
+
+@dataclass
+class StragglerMitigator:
+    deadline_factor: float = 3.0
+    window: int = 32
+    durations: List[float] = field(default_factory=list)
+    strikes: dict = field(default_factory=dict)
+
+    def observe(self, source: str, duration_s: float) -> bool:
+        """Record a round duration; True if `source` is straggling."""
+        self.durations.append(duration_s)
+        if len(self.durations) > self.window:
+            self.durations.pop(0)
+        med = float(np.median(self.durations))
+        if len(self.durations) >= 8 and duration_s > self.deadline_factor * med:
+            self.strikes[source] = self.strikes.get(source, 0) + 1
+            return True
+        self.strikes.pop(source, None)
+        return False
+
+    def should_evict(self, source: str, threshold: int = 3) -> bool:
+        return self.strikes.get(source, 0) >= threshold

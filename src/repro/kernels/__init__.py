@@ -1,0 +1,3 @@
+from repro.kernels.ops import (  # noqa: F401
+    flash_prefill_op, paged_attention_op, ssd_scan_op,
+)

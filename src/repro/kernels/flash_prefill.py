@@ -1,0 +1,113 @@
+"""Flash attention for (chunked) prefill — Pallas TPU kernel.
+
+Online-softmax attention with causal + sliding-window masking and a
+``q_offset`` so a prefill chunk can attend to an already-cached prefix
+(the chunked-prefill path of the serving engine).
+
+TPU mapping: grid (B, Hq, Sq/bq, Skv/bkv) with the KV dimension innermost
+so the f32 accumulator lives in VMEM scratch across KV steps; tiles are
+MXU-aligned (bq, bkv multiples of 128 in production; head_dim on the lane
+axis). Fully-masked KV blocks are skipped with ``pl.when`` — for causal
+masking this halves the work, for sliding windows it bounds it by
+O(window) per query row.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bkv: int, causal: bool, window, q_offset: int,
+            kv_steps: int, scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
+        + q_offset
+    k_pos = kj * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    # Block-level relevance: any unmasked element in this tile?
+    first_q = qi * bq + q_offset
+    last_q = first_q + bq - 1
+    first_k = kj * bkv
+    last_k = first_k + bkv - 1
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant = relevant & (first_k <= last_q)
+    if window is not None:
+        relevant = relevant & (last_k > first_q - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bkv, D]
+        v = v_ref[0, 0].astype(jnp.float32)           # [bkv, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        mask = jnp.ones((bq, bkv), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, *, causal: bool = True, window=None,
+                  q_offset: int = 0, block_q: int = 128,
+                  block_kv: int = 128, interpret: bool = False):
+    """q [B, Hq, Sq, D], k/v [B, Hkv, Skv, D] -> [B, Hq, Sq, D]."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    kv_steps = Skv // bkv
+    grid = (B, Hq, Sq // bq, kv_steps)
+    kernel = functools.partial(
+        _kernel, bq=bq, bkv=bkv, causal=causal, window=window,
+        q_offset=q_offset, kv_steps=kv_steps, scale=1.0 / math.sqrt(D))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container (kernel bodies execute in Python) and compile to Mosaic on
+real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "block_q", "block_kv"))
+def flash_prefill_op(q, k, v, *, causal=True, window=None, q_offset=0,
+                     block_q=128, block_kv=128):
+    return _flash(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                  block_q=block_q, block_kv=block_kv,
+                  interpret=not _on_tpu())
+
+
+@jax.jit
+def paged_attention_op(q, k_pages, v_pages, block_tables, seq_lens):
+    return _paged(q, k_pages, v_pages, block_tables, seq_lens,
+                  interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan_op(X, dA, B_mat, C_mat, *, chunk=64):
+    return _ssd(X, dA, B_mat, C_mat, chunk=chunk, interpret=not _on_tpu())
+
+
+# re-export oracles for benchmarks
+flash_prefill_ref = ref.flash_prefill_ref
+paged_attention_ref = ref.paged_attention_ref
+ssd_scan_ref = ref.ssd_scan_ref

@@ -1,0 +1,102 @@
+"""Paged decode attention — Pallas TPU kernel.
+
+One query token per sequence attends over a paged KV cache addressed
+through per-sequence block tables. This is the TPU-native re-think of
+vLLM-style CUDA paged attention (DESIGN.md §3): instead of warp-level
+gather, each grid step DMAs one KV page HBM→VMEM, selected by a
+scalar-prefetched block table (``PrefetchScalarGridSpec``), and folds it
+into an online-softmax accumulator. Pages are contiguous [page, Hkv, D]
+tiles so the MXU sees aligned [page, D] operands; G query heads of a KV
+head are processed together as a [G, D] tile.
+
+Grid: (B, Hkv, pages_per_seq) — pages innermost, accumulator in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, page: int, pages_per_seq: int,
+            scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = seq_lens[b]
+    base = p * page
+
+    @pl.when(base < seq_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)           # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)           # [page, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pexp @ v
+        m_ref[...] = m_new
+
+    @pl.when(p == pages_per_seq - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                    interpret: bool = False):
+    """q [B, Hq, D]; k_pages/v_pages [P, page, Hkv, D];
+    block_tables [B, pages_per_seq] i32; seq_lens [B] i32 -> [B, Hq, D]."""
+    B, Hq, D = q.shape
+    num_pages, page, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    pages_per_seq = block_tables.shape[1]
+    grid = (B, Hkv, pages_per_seq)
+    kernel = functools.partial(
+        _kernel, page=page, pages_per_seq=pages_per_seq,
+        scale=1.0 / math.sqrt(D))
+    qg = q.reshape(B, Hkv, G, D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, p, bt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, p, bt, sl: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, p, bt, sl: (bt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, bt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, qg, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

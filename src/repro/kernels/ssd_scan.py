@@ -1,0 +1,105 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the GPU version
+leans on warp-level scans; here each (batch, head) runs the chunk
+recurrence *sequentially over the grid's innermost axis* while the
+intra-chunk quadratic term is dense matmul work for the MXU:
+
+  per chunk c:   L    = exp(segsum(dA_c))            [cs, cs]  (masked)
+                 Ydiag= ((C_c B_c^T) * L) X_c        MXU
+                 Yoff = (C_c * exp(cum)) state_c     MXU
+                 state= decay_total * state + (B_c * decay_end)^T X_c
+
+The inter-chunk state [P, N] persists in a VMEM scratch accumulator across
+grid steps — no HBM round-trip for the recurrence (this is the part the
+GPU implementation does via global-memory chunk states).
+
+Grid: (B, H, num_chunks), chunks innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref, *,
+            cs: int, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # [cs, P]
+    da = da_ref[0, 0, 0].astype(jnp.float32)     # [cs]
+    bm = b_ref[0, 0, 0].astype(jnp.float32)      # [cs, N]
+    cm = c_ref[0, 0, 0].astype(jnp.float32)      # [cs, N]
+
+    cum = jnp.cumsum(da)                         # [cs]
+    # intra-chunk decay matrix L[i, j] = exp(cum_i - cum_j) for j <= i
+    seg = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    Lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = (cm @ bm.T) * Lmat                  # [cs, cs]
+    y = scores @ x                               # intra-chunk
+    # contribution of the carried state
+    decay_in = jnp.exp(cum)[:, None]             # [cs, 1]
+    y = y + (cm * decay_in) @ state_ref[...].T   # [cs, N]@[N, P]
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    # state update
+    total = jnp.exp(cum[-1])
+    decay_end = jnp.exp(cum[-1] - cum)[:, None]  # [cs, 1]
+    new_state = (x.T @ (bm * decay_end))         # [P, N]
+    state_ref[...] = state_ref[...] * total + new_state
+
+    @pl.when(ci == num_chunks - 1)
+    def _finalize():
+        st_out_ref[0, 0] = state_ref[...].astype(st_out_ref.dtype)
+
+
+def ssd_scan(X, dA, B_mat, C_mat, *, chunk: int = 64,
+             interpret: bool = False):
+    """X [B, L, H, P] (dt-scaled), dA [B, L, H], B_mat/C_mat [B, L, H, N].
+
+    Returns (Y [B, L, H, P], final_state [B, H, P, N] f32).
+    """
+    b, l, h, p = X.shape
+    n = B_mat.shape[-1]
+    cs = min(chunk, l)
+    assert l % cs == 0, (l, cs)
+    nc = l // cs
+    # [B, H, nc, cs, ...] layouts so each grid step reads one chunk tile
+    Xc = X.transpose(0, 2, 1, 3).reshape(b, h, nc, cs, p)
+    dAc = dA.transpose(0, 2, 1).reshape(b, h, nc, cs)
+    Bc = B_mat.transpose(0, 2, 1, 3).reshape(b, h, nc, cs, n)
+    Cc = C_mat.transpose(0, 2, 1, 3).reshape(b, h, nc, cs, n)
+    kernel = functools.partial(_kernel, cs=cs, num_chunks=nc)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, cs, p), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, 1, cs, n), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, cs, n), lambda i, j, c: (i, j, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, cs, p), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, cs, p), X.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(Xc, dAc, Bc, Cc)
+    Y = y.reshape(b, h, l, p).transpose(0, 2, 1, 3)
+    return Y, st

@@ -1,0 +1,139 @@
+"""Host-side paged KV block pool — the allocator under the Pallas
+``paged_attention`` kernel and the LiveServe KV manager.
+
+The pool owns fixed-size pages of device KV storage
+([num_pages, page_size, Hkv, hd] per layer); sequences own ordered page
+lists (prefix-first, matching §5.1's suffix-first eviction). Block tables
+([B, pages_per_seq] int32) are built per decode batch and handed to the
+kernel via scalar prefetch. A DRAM tier holds offloaded page *contents*
+(host numpy) so evict/reload round-trips are bit-exact.
+
+This is hardware-agnostic bookkeeping: the LiveServe policies decide
+*which* sessions' pages move; this module moves them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclass
+class SeqPages:
+    seq_id: str
+    pages: List[int] = field(default_factory=list)   # prefix-first order
+    length: int = 0                                   # tokens written
+    offloaded: Dict[int, np.ndarray] = field(default_factory=dict)
+    # offloaded: logical page index (position in `pages`) -> host copy;
+    # an offloaded slot keeps -1 in `pages`.
+
+
+class PagedPool:
+    def __init__(self, num_pages: int, page_size: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.seqs: Dict[str, SeqPages] = {}
+
+    # ------------------------------------------------------------ alloc
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def seq(self, seq_id: str) -> SeqPages:
+        s = self.seqs.get(seq_id)
+        if s is None:
+            s = SeqPages(seq_id)
+            self.seqs[seq_id] = s
+        return s
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def ensure_capacity(self, seq_id: str, new_length: int) -> List[int]:
+        """Grow a sequence to hold new_length tokens; returns newly
+        allocated physical pages."""
+        s = self.seq(seq_id)
+        need = self.pages_for(new_length) - len(s.pages)
+        out = []
+        for _ in range(max(0, need)):
+            if not self.free:
+                raise OutOfPages(f"pool exhausted growing {seq_id}")
+            p = self.free.pop()
+            s.pages.append(p)
+            out.append(p)
+        s.length = max(s.length, new_length)
+        return out
+
+    def release(self, seq_id: str) -> None:
+        s = self.seqs.pop(seq_id, None)
+        if s is None:
+            return
+        for p in s.pages:
+            if p >= 0:
+                self.free.append(p)
+
+    # ------------------------------------------------------------ tables
+    def block_table(self, seq_ids: List[str], pages_per_seq: int,
+                    *, pad_page: int = 0) -> np.ndarray:
+        """[B, pages_per_seq] int32 for the paged_attention kernel.
+        Raises if any sequence has offloaded pages (must reload first —
+        the correctness contract of §5.2's sync-fallback path)."""
+        bt = np.full((len(seq_ids), pages_per_seq), pad_page, np.int32)
+        for i, sid in enumerate(seq_ids):
+            s = self.seq(sid)
+            if s.offloaded:
+                raise RuntimeError(f"{sid} has offloaded pages")
+            n = min(len(s.pages), pages_per_seq)
+            bt[i, :n] = s.pages[:n]
+        return bt
+
+    def seq_lens(self, seq_ids: List[str]) -> np.ndarray:
+        return np.array([self.seq(s).length for s in seq_ids], np.int32)
+
+    # ------------------------------------------------------------ tiers
+    def offload_suffix(self, seq_id: str, n_pages: int, kv_pages) -> int:
+        """Move the LAST n_pages of a sequence to host (suffix-first,
+        §5.1). kv_pages: device array [num_pages, page, Hkv, hd] (or a
+        pytree leaf); contents copied to host. Returns pages freed."""
+        s = self.seq(seq_id)
+        resident = [i for i, p in enumerate(s.pages) if p >= 0]
+        take = resident[-n_pages:] if n_pages else []
+        for li in reversed(take):
+            phys = s.pages[li]
+            s.offloaded[li] = np.asarray(kv_pages[phys])
+            s.pages[li] = -1
+            self.free.append(phys)
+        return len(take)
+
+    def reload(self, seq_id: str, kv_pages):
+        """Bring offloaded pages back. Returns (updated kv_pages, loaded
+        page count). kv_pages is a jax array; updates are functional."""
+        s = self.seq(seq_id)
+        loaded = 0
+        for li in sorted(s.offloaded):
+            if not self.free:
+                raise OutOfPages(f"pool exhausted reloading {seq_id}")
+            phys = self.free.pop()
+            kv_pages = kv_pages.at[phys].set(s.offloaded[li])
+            s.pages[li] = phys
+            loaded += 1
+        s.offloaded.clear()
+        return kv_pages, loaded
+
+    def resident_pages(self, seq_id: str) -> int:
+        return sum(1 for p in self.seq(seq_id).pages if p >= 0)
+
+    def stats(self) -> dict:
+        return {
+            "free": self.free_pages,
+            "used": self.num_pages - self.free_pages,
+            "seqs": len(self.seqs),
+            "offloaded_pages": sum(len(s.offloaded)
+                                   for s in self.seqs.values()),
+        }

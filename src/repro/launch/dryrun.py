@@ -1,0 +1,383 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture x input shape x mesh): build ShapeDtypeStruct
+inputs, pjit-lower the step with the ShardingRules specs, ``compile()``,
+and record memory_analysis / cost_analysis / collective bytes parsed from
+the optimized HLO into experiments/dryrun/<cell>.json.
+
+The 512 placeholder host devices exist ONLY in this process (the env var
+above is set before any jax import); smoke tests and benchmarks see 1
+device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_configs
+from repro.distributed.sharding import ShardingRules
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.training import optimizer as opt_mod
+from repro.training.train_loop import TrainConfig, build_train_step
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^=()]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, summed per op kind."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        types, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(types):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def reduced_depth_cfg(cfg, L0: int):
+    """Same architecture at depth L0 (calibration compile)."""
+    import dataclasses
+    kw = {"num_layers": L0}
+    if cfg.encoder is not None:
+        kw["encoder"] = dataclasses.replace(cfg.encoder, num_layers=L0)
+    return cfg.replace(**kw)
+
+
+def calibration_depths(cfg):
+    if cfg.family == "hybrid":
+        pat = len(cfg.rglru.block_pattern)
+        return pat, 2 * pat            # keep the block pattern intact
+    lo = 2 if (cfg.moe is None or not cfg.moe.first_dense_layers) else 2
+    return lo, lo + 2
+
+
+def cost_calibrated(cfg, cell, mesh, *, fsdp, microbatches):
+    """HLO cost terms via reduced-depth UNROLLED compiles + linear
+    extrapolation over layer count.
+
+    XLA's HloCostAnalysis counts while-loop bodies once, so exact totals
+    need unrolled scans — but a full-depth unrolled train graph doesn't
+    compile in reasonable time on one CPU core. Layer stacks are
+    homogeneous, so cost(L) = a + b*L exactly; two shallow unrolled
+    compiles recover (a, b) and the full-depth totals follow.
+    """
+    l_lo, l_hi = calibration_depths(cfg)
+    samples = []
+    for L0 in (l_lo, l_hi):
+        c0 = reduced_depth_cfg(cfg, L0)
+        rules = ShardingRules(c0, mesh, mode=cell.kind, fsdp=fsdp)
+        step, args, in_sh, donate, out_sh = build_step(
+            c0, cell, mesh, rules, microbatches=microbatches)
+        M.set_scan_unroll(True)
+        try:
+            fresh = lambda *a: step(*a)
+            compiled = jax.jit(fresh, in_shardings=in_sh,
+                               out_shardings=out_sh,
+                               donate_argnums=donate).lower(*args).compile()
+        finally:
+            M.set_scan_unroll(1)
+        cost = compiled.cost_analysis()
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        samples.append({
+            "L": L0,
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            **{f"coll_{k}": float(v) for k, v in coll.items()},
+        })
+    lo, hi = samples
+    L = cfg.num_layers
+    out = {}
+    for k in set(lo) | set(hi):
+        if k == "L":
+            continue
+        a, b = lo.get(k, 0.0), hi.get(k, 0.0)
+        slope = (b - a) / (hi["L"] - lo["L"])
+        out[k] = max(0.0, a + slope * (L - lo["L"]))
+    out["calibration"] = samples
+    return out
+
+
+def microbatches_for(cfg, cell, mesh) -> int:
+    """Grad-accum so per-device live attention logits stay within ~1.5 GB
+    (the dry-run lowers einsum attention, which materializes
+    [B_dev/mb, H_dev, S, S] f32 logits; the TPU runtime path streams KV
+    tiles through the Pallas flash kernel instead)."""
+    if cell.kind != "train":
+        return 1
+    M = mesh.shape["model"]
+    D = mesh.size // M
+    h = cfg.num_heads
+    h_dev = h // M if h % M == 0 else h
+    s = cell.seq_len
+    if cfg.family == "hybrid":
+        s = min(s, cfg.rglru.local_window)  # mask bounds the live window
+    b_dev = max(1, cell.global_batch // D)
+    logits_bytes = b_dev * h_dev * cell.seq_len * s * 4
+    mb = max(1, -(-logits_bytes // int(1.5e9)))
+    # round to a divisor of the per-device batch
+    while b_dev % mb:
+        mb += 1
+    return min(mb, b_dev)
+
+
+def build_step(cfg, cell, mesh, rules, *, microbatches=None):
+    """Returns (fn, args_sds, in_shardings, donate_argnums)."""
+    if cell.kind == "train":
+        opt = opt_mod.select_optimizer(cfg)
+        mb = (microbatches if microbatches is not None
+              else microbatches_for(cfg, cell, mesh))
+        tc = TrainConfig(microbatches=mb, remat=True,
+                         seq_shard_activations=rules.fsdp,
+                         bf16_grad_reduce=os.environ.get(
+                             "REPRO_BF16_GRAD", "") == "1")
+        step = build_train_step(cfg, opt, tc, mesh=mesh)
+        p_sds = SP.param_shapes(cfg)
+        o_sds = jax.eval_shape(
+            functools.partial(opt_mod.opt_init, opt), p_sds)
+        b_sds = SP.batch_specs(cfg, cell)
+        in_sh = (rules.params(p_sds), rules.opt_state(o_sds),
+                 rules.batch(b_sds))
+        # params/opt_state are consumed -> donated (in-place update)
+        out_sh = (rules.params(p_sds), rules.opt_state(o_sds), None)
+        return step, (p_sds, o_sds, b_sds), in_sh, (0, 1), out_sh
+    if cell.kind == "prefill":
+        tokens, cache, extras = SP.prefill_specs(cfg, cell)
+
+        def step(params, tokens, cache, extras):
+            return M.prefill(cfg, params, tokens, cache, mesh=mesh,
+                             **extras)
+        p_sds = SP.param_shapes(cfg)
+        in_sh = (rules.params(p_sds), rules.batch({"tokens": tokens}
+                                                  )["tokens"],
+                 rules.cache(cache), rules.batch(extras))
+        # pin the returned cache to the input layout — the element-wise
+        # fresh-cache write otherwise lets the output inherit the
+        # activation sharding (seq-unsharded: 8x output blow-up)
+        out_sh = (rules.logits_sharding(cell.global_batch),
+                  rules.cache(cache))
+        return step, (p_sds, tokens, cache, extras), in_sh, (2,), out_sh
+    # decode
+    tokens, cache = SP.decode_specs(cfg, cell)
+
+    def step(params, tokens, cache):
+        return M.decode_step(cfg, params, tokens, cache, mesh=mesh)
+    p_sds = SP.param_shapes(cfg)
+    in_sh = (rules.params(p_sds),
+             rules.token_sharding(tokens.shape[0]),
+             rules.cache(cache))
+    out_sh = (rules.logits_sharding(cell.global_batch),
+              rules.cache(cache))
+    return step, (p_sds, tokens, cache), in_sh, (2,), out_sh
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             out_dir: str = "experiments/dryrun", fsdp=None,
+             calibrate: bool = True, verbose: bool = True,
+             attention_impl: str = "einsum", microbatches=None,
+             expert_tp: bool = False, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if attention_impl != "einsum":
+        cfg = cfg.replace(attention_impl=attention_impl)
+    cell = SP.SHAPES[shape]
+    mesh_tag = ("pod512" if multi_pod else "pod256") + tag
+    result = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+              "status": "ok", "attention_impl": attention_impl,
+              "expert_tp": expert_tp}
+    skip = SP.cell_supported(cfg, shape)
+    if skip:
+        result.update(status="skip", reason=skip)
+        _write(out_dir, result)
+        return result
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        rules = ShardingRules(cfg, mesh, mode=cell.kind, fsdp=fsdp,
+                              expert_tp=expert_tp)
+        if expert_tp:
+            from repro.models import moe as moe_mod
+            moe_mod.set_expert_tp(True)
+        step, args, in_sh, donate, out_sh = build_step(
+            cfg, cell, mesh, rules, microbatches=microbatches)
+        with jax.set_mesh(mesh):
+            # 1) production program: layer scans (O(1) HLO, fast compile);
+            #    memory_analysis of THIS artifact proves the cell fits.
+            jfn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            # 2) cost terms via reduced-depth unrolled calibration
+            #    (XLA counts while-loop bodies once; see cost_calibrated)
+            mb = (microbatches if microbatches is not None
+                  else microbatches_for(cfg, cell, mesh))
+            if calibrate:
+                cal = cost_calibrated(cfg, cell, mesh, fsdp=rules.fsdp,
+                                      microbatches=mb)
+            else:   # multi-pod pass proves compile+fit only (roofline
+                    # table is single-pod); fall back to raw counts
+                cost = compiled.cost_analysis()
+                cal = {"flops": float(cost.get("flops", 0.0)),
+                       "bytes": float(cost.get("bytes accessed", 0.0))}
+                for k, v in collective_bytes_from_hlo(
+                        compiled.as_text()).items():
+                    cal[f"coll_{k}"] = float(v)
+            t_unroll = time.time() - t0 - t_lower - t_compile
+        coll = {k.replace("coll_", ""): v for k, v in cal.items()
+                if k.startswith("coll_")}
+        coll.setdefault("total", 0.0)
+        flops_dev = cal["flops"]
+        bytes_dev = cal["bytes"]
+        mf = SP.model_flops(cfg, cell)
+        compute_t = flops_dev / PEAK_FLOPS
+        memory_t = bytes_dev / HBM_BW
+        coll_t = coll["total"] / LINK_BW
+        dominant = max((("compute", compute_t), ("memory", memory_t),
+                        ("collective", coll_t)), key=lambda kv: kv[1])[0]
+        result.update(
+            chips=chips,
+            fsdp=rules.fsdp,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            unroll_compile_s=round(t_unroll, 2),
+            flops_per_device=flops_dev,
+            bytes_per_device=bytes_dev,
+            collective_bytes_per_device=coll,
+            compute_term_s=compute_t,
+            memory_term_s=memory_t,
+            collective_term_s=coll_t,
+            dominant=dominant,
+            model_flops_global=mf,
+            useful_flops_fraction=(
+                mf / (flops_dev * chips) if flops_dev else None),
+            memory_analysis=_mem_dict(mem),
+            calibration=cal.get("calibration"),
+            microbatches=mb,
+        )
+        if verbose:
+            print(f"[{arch} x {shape} x {mesh_tag}] OK "
+                  f"compile={t_compile:.1f}s dominant={dominant} "
+                  f"c/m/coll={compute_t:.2e}/{memory_t:.2e}/{coll_t:.2e}s")
+            print("  memory_analysis:", result["memory_analysis"])
+            print("  cost_analysis: flops/device=%.3e bytes/device=%.3e"
+                  % (flops_dev, bytes_dev))
+    except Exception as e:                       # noqa: BLE001
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{arch} x {shape} x {mesh_tag}] FAIL {e}")
+    finally:
+        if expert_tp:
+            from repro.models import moe as moe_mod
+            moe_mod.set_expert_tp(False)
+    _write(out_dir, result)
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "peak_memory_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _write(out_dir: str, result: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    fn = f"{result['arch']}_{result['shape']}_{result['mesh']}.json"
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-calibration", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--attn-impl", default="einsum",
+                    choices=["einsum", "surrogate"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--expert-tp", action="store_true")
+    ap.add_argument("--tag", default="",
+                    help="suffix for output JSONs (perf iterations)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    shapes = (list(SP.SHAPES) if (args.all or not args.shape)
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+    n_ok = n_fail = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}_{shape}_{'pod512' if mp else 'pod256'}"
+        if args.skip_existing and os.path.exists(
+                os.path.join(args.out, tag + ".json")):
+            with open(os.path.join(args.out, tag + ".json")) as f:
+                if json.load(f).get("status") in ("ok", "skip"):
+                    print(f"[{tag}] cached")
+                    continue
+        r = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                     calibrate=not args.no_calibration,
+                     attention_impl=args.attn_impl,
+                     microbatches=args.microbatches,
+                     expert_tp=args.expert_tp, tag=args.tag)
+        n_ok += r["status"] in ("ok", "skip")
+        n_fail += r["status"] == "error"
+    print(f"dry-run complete: {n_ok} ok/skip, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

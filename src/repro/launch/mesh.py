@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; callers (dryrun, launchers) decide when devices materialize.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a 2-pod 'pod' DP axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU lowering tests (run under forced host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Every non-'model' axis is a data/batch axis ('pod' included)."""
+    return tuple(n for n in mesh.axis_names if n != "model")

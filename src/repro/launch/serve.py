@@ -1,0 +1,54 @@
+"""Serving launcher — runs the realtime interaction pipeline.
+
+  PYTHONPATH=src python -m repro.launch.serve --model qwen3-omni-like \
+      --workload interactive --concurrency 12 --barge-in 0.5 \
+      --system liveserve
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="qwen3-omni-like",
+                    choices=["qwen3-omni-like", "ming-omni-like"])
+    ap.add_argument("--workload", default="interactive",
+                    choices=["sharegpt", "interactive", "mixed"])
+    ap.add_argument("--system", default="liveserve",
+                    choices=["liveserve", "vllm-omni", "vllm-omni-wo"])
+    ap.add_argument("--sessions", type=int, default=32)
+    ap.add_argument("--concurrency", type=int, default=8)
+    ap.add_argument("--barge-in", type=float, default=0.0)
+    ap.add_argument("--kv-gb", type=float, default=4.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    from repro.serving.costmodel import PIPELINES
+    from repro.serving.simulator import run_sim
+    from repro.serving.workload import WorkloadConfig
+
+    systems = {
+        "liveserve": dict(policy="liveserve"),
+        "vllm-omni": dict(policy="fcfs", kv_policy="lru", preload=False),
+        "vllm-omni-wo": dict(policy="fcfs", kv_policy="none",
+                             preload=False),
+    }
+    pipe = PIPELINES[args.model](kv_capacity_gb=args.kv_gb)
+    wl = WorkloadConfig(kind=args.workload, num_sessions=args.sessions,
+                        concurrency=args.concurrency, seed=args.seed,
+                        p_barge_in=args.barge_in)
+    m = run_sim(pipe, wl, until=3600.0, **systems[args.system])
+    s = m.summary()
+    if args.json:
+        print(json.dumps(s, indent=1))
+    else:
+        for k, v in s.items():
+            print(f"{k:20s} {v:.4f}" if isinstance(v, float)
+                  else f"{k:20s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) cell.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these. Modality frontends are STUBS: whisper gets precomputed
+frame embeddings, paligemma precomputed patch embeddings (system prompt
+contract).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str              # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg, shape_name: str) -> Optional[str]:
+    """None if runnable; otherwise the skip reason (recorded in the table)."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("full quadratic attention: 500k-token decode needs "
+                "sub-quadratic state (DESIGN.md §5)")
+    return None
+
+
+def param_shapes(cfg):
+    return jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def cache_shapes(cfg, batch: int, capacity: int):
+    enc = cfg.encoder.num_frames if cfg.family == "encdec" else 0
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, capacity,
+                          enc_frames=enc))
+
+
+def batch_specs(cfg, cell: ShapeCell) -> dict:
+    """Training-batch ShapeDtypeStructs."""
+    B, S = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    if cfg.frontend == "vision":
+        P = cfg.frontend_len
+        return {
+            "tokens": SDS((B, S - P), jnp.int32),
+            "labels": SDS((B, S - P), jnp.int32),
+            "patches": SDS((B, P, d), jnp.dtype(cfg.dtype)),
+            "prefix_len": SDS((B,), jnp.int32),
+        }
+    out = {"tokens": SDS((B, S), jnp.int32),
+           "labels": SDS((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = SDS((B, cfg.encoder.num_frames, d),
+                            jnp.dtype(cfg.dtype))
+    return out
+
+
+def prefill_specs(cfg, cell: ShapeCell):
+    """(tokens, cache, extras) ShapeDtypeStructs for a prefill step."""
+    B, S = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    extras = {}
+    S_text = S
+    if cfg.frontend == "vision":
+        P = cfg.frontend_len
+        S_text = S - P
+        extras["frontend_embeds"] = SDS((B, P, d), jnp.dtype(cfg.dtype))
+        extras["prefix_len"] = SDS((B,), jnp.int32)
+    if cfg.family == "encdec":
+        extras["enc_frames"] = SDS((B, cfg.encoder.num_frames, d),
+                                   jnp.dtype(cfg.dtype))
+    tokens = SDS((B, S_text), jnp.int32)
+    cache = cache_shapes(cfg, B, S)
+    return tokens, cache, extras
+
+
+def decode_specs(cfg, cell: ShapeCell):
+    """(tokens, cache) for a single decode step over a seq_len-deep cache."""
+    B, S = cell.global_batch, cell.seq_len
+    tokens = SDS((B,), jnp.int32)
+    cache = cache_shapes(cfg, B, S)
+    return tokens, cache
+
+
+def model_flops(cfg, cell: ShapeCell) -> float:
+    """Reference useful-FLOPs: 6*N_active*D for training, 2*N_active*D for
+    inference (D = tokens processed in the lowered step)."""
+    n = cfg.num_active_params()
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch          # decode: one token per seq

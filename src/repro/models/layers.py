@@ -1,0 +1,213 @@
+"""Core transformer layers, written as pure functions over param pytrees.
+
+Everything here lowers cleanly under pjit (einsum/jnp only — the Pallas
+kernels in ``repro.kernels`` are the TPU runtime path and are swapped in at
+the serving-engine level, never in the dry-run graph, because XLA:CPU cannot
+cost-model custom calls).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- init
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(in_axis_size)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            ).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dt)
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, D]; positions: [B, S] (absolute)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_mask(q_pos, kv_pos, *, causal: bool,
+                   window: Optional[int] = None,
+                   kv_valid=None, prefix_len=None):
+    """Boolean [B, Sq, Skv] mask (True = attend).
+
+    q_pos: [B, Sq] absolute positions; kv_pos: [B, Skv].
+    window: sliding-window size (q - k < window).
+    prefix_len: [B] prefix-LM boundary — bidirectional within the prefix.
+    """
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), dtype=bool)
+    if causal:
+        c = k <= q
+        if prefix_len is not None:
+            c = c | (k < prefix_len[:, None, None])
+        mask = mask & c
+    if window is not None:
+        mask = mask & (q - k < window)
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, :]
+    return mask
+
+
+def gqa_attention(q, k, v, mask, *, logit_softcap: Optional[float] = None,
+                  scale: Optional[float] = None, impl: str = "einsum"):
+    """Grouped-query attention.
+
+    q: [B, Sq, Hq, D], k/v: [B, Skv, Hkv, D], mask: [B, Sq, Skv] bool.
+    Returns [B, Sq, Hq, D].
+
+    impl='surrogate' replaces the S^2 logits chain with a shape-preserving
+    stand-in that only streams Q/K/V/O — used by the dry-run perf pass to
+    measure the non-attention byte load of a cell (the TPU runtime path
+    computes real attention in the Pallas flash kernel, whose HBM traffic
+    is exactly this Q/K/V/O streaming; XLA cannot cost-model the custom
+    call, so the surrogate lowering bounds it empirically).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    if impl == "surrogate":
+        kv = jnp.mean(k + v, axis=1, keepdims=True)          # reads K+V
+        out = q * jnp.asarray(scale, q.dtype) + jnp.repeat(
+            kv, G, axis=2)[:, :1]                            # reads Q
+        return out.reshape(B, Sq, Hq, v.shape[-1]) if D == v.shape[-1] \
+            else jnp.repeat(out[..., :1], v.shape[-1], axis=-1)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_softcap is not None:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, v.shape[-1])
+
+
+# ----------------------------------------------------------------- mlp
+def mlp_apply(params, x, kind: str):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    if kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+        return h @ params["w_down"]
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+        return h @ params["w_down"] + params["b_down"]
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), d_model, dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), d_model, dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+        }
+    if kind == "squared_relu":
+        return {
+            "w_up": dense_init(k1, (d_model, d_ff), d_model, dtype),
+            "w_down": dense_init(k2, (d_ff, d_model), d_ff, dtype),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": dense_init(k1, (d_model, d_ff), d_model, dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": dense_init(k2, (d_ff, d_model), d_ff, dtype),
+            "b_down": jnp.zeros((d_model,), dtype),
+        }
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------- attn block
+def attn_init(key, cfg, dtype, *, d_model=None, mha=False):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq = cfg.num_heads
+    hkv = hq if mha else cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, hq, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), d, dtype),
+        "wo": dense_init(ks[3], (hq, hd, d), hq * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attn_project_qkv(params, cfg, x, positions, *, rope=True):
+    """Project + (optionally) rope. Returns q [B,S,Hq,D], k/v [B,S,Hkv,D]."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rms_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_output(params, out):
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])

@@ -1,0 +1,100 @@
+"""Multi-head latent attention (DeepSeek-V2, arXiv:2405.04434).
+
+Prefill/train decompress the shared KV latent into per-head K/V and run
+standard attention. Decode uses the published absorption trick: W_uk is
+absorbed into the query and W_uv into the output so attention runs directly
+against the [B, S, kv_lora] latent cache — this is what makes MLA KV blocks
+small for the serving-side KV manager.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, attention_mask, dense_init, \
+    gqa_attention, rms_norm, NEG_INF
+
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d = cfg.d_model
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), d, dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, H,
+                                   m.nope_head_dim + m.rope_head_dim),
+                           m.q_lora_rank, dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank + m.rope_head_dim),
+                            d, dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "w_uk": dense_init(ks[3], (m.kv_lora_rank, H, m.nope_head_dim),
+                           m.kv_lora_rank, dtype),
+        "w_uv": dense_init(ks[4], (m.kv_lora_rank, H, m.v_head_dim),
+                           m.kv_lora_rank, dtype),
+        "wo": dense_init(ks[5], (H, m.v_head_dim, d),
+                         H * m.v_head_dim, dtype),
+    }
+
+
+def _project_q(params, cfg, x, positions):
+    m = cfg.mla
+    q_lat = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsr,rhe->bshe", q_lat, params["w_uq"])
+    q_nope = q[..., :m.nope_head_dim]
+    q_rope = apply_rope(q[..., m.nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, cfg, x, positions):
+    m = cfg.mla
+    kv = x @ params["w_dkv"]
+    ckv = rms_norm(kv[..., :m.kv_lora_rank], params["kv_norm"], cfg.rms_eps)
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)[:, :, 0]          # [B, S, dr] shared
+    return ckv, k_rope
+
+
+def mla_forward(params, cfg, x, positions, mask, *, impl="einsum"):
+    """Train/prefill path (decompressed). Returns (out, (ckv, k_rope))."""
+    m = cfg.mla
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    ckv, k_rope = _project_kv_latent(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", ckv, params["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", ckv, params["w_uv"])
+    H = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (H, m.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    if impl == "surrogate":   # see layers.gqa_attention docstring
+        out = q[..., :m.v_head_dim] * scale \
+            + jnp.mean(v, axis=1, keepdims=True)
+    else:
+        out = gqa_attention(q, k, v, mask, scale=scale)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, (ckv, k_rope)
+
+
+def mla_decode(params, cfg, x, positions, ckv_cache, krope_cache, mask):
+    """Absorbed decode. x [B, 1, d]; caches [B, S, r] / [B, S, dr]."""
+    m = cfg.mla
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    new_ckv, new_krope = _project_kv_latent(params, cfg, x, positions)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    # absorb W_uk into q: [B,1,H,r]
+    q_abs = jnp.einsum("bqhe,rhe->bqhr", q_nope, params["w_uk"])
+    logits = (jnp.einsum("bqhr,bkr->bhqk", q_abs, ckv_cache,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhe,bke->bhqk", q_rope, krope_cache,
+                           preferred_element_type=jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(ckv_cache.dtype)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", probs, ckv_cache)
+    out = jnp.einsum("bqhr,rhe->bqhe", o_lat, params["w_uv"])
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, (new_ckv, new_krope)

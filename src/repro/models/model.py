@@ -1,0 +1,689 @@
+"""Model assembly: init / forward / loss / prefill / decode for every
+assigned architecture family.
+
+Pure functions over param pytrees. Homogeneous stacks (dense, moe, ssm, vlm)
+scan over layer-stacked params so HLO size and compile time are O(1) in
+depth; the hybrid (RecurrentGemma) runs its published non-uniform
+(rglru, rglru, local_attn) pattern as an unrolled loop; deepseek's leading
+dense layer is unrolled before the MoE scan; whisper runs encoder and
+decoder stacks with cross-attention.
+
+KV caches are ring buffers of ``W`` slots (W = full capacity, or the
+attention window for SWA/local archs — this is what makes long_500k decode
+O(window) instead of O(seq)). ``kv_pos`` tracks absolute positions so masks
+stay exact after wraparound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import ssm as ssm_mod
+
+MOE_AUX_COEF = 0.01
+Z_LOSS_COEF = 1e-4
+
+# Dry-run cost-analysis switch: XLA's HloCostAnalysis counts while-loop
+# bodies ONCE, so the roofline pass re-lowers with fully unrolled layer
+# scans (exact FLOP/byte/collective counts); production lowering keeps
+# the scan (O(1) HLO size & compile time).
+_SCAN_UNROLL = 1
+
+
+def set_scan_unroll(v) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = v
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=_SCAN_UNROLL)
+
+
+# ======================================================================
+# init
+# ======================================================================
+def _stacked(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _dense_layer_init(key, cfg, dtype, *, d_ff=None, moe_layer=False):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = L.attn_init(ks[0], cfg, dtype)
+    if moe_layer:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, d_ff or cfg.d_ff,
+                              cfg.mlp_kind, dtype)
+    return p
+
+
+def _ssm_layer_init(key, cfg, dtype):
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "mixer": ssm_mod.mamba2_init(key, cfg, dtype)}
+
+
+def _rglru_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    r = cfg.rglru
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "rec": rg.rglru_init(ks[0], cfg.d_model,
+                                 r.lru_width or cfg.d_model,
+                                 r.conv_width, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                              dtype)}
+
+
+def _xattn_layer_init(key, cfg, dtype):
+    """whisper decoder layer: self-attn + cross-attn + mlp."""
+    ks = jax.random.split(key, 3)
+    p = _dense_layer_init(ks[0], cfg, dtype)
+    p["ln_x"] = jnp.zeros((cfg.d_model,), dtype)
+    p["xattn"] = L.attn_init(ks[1], cfg, dtype, mha=True)
+    return p
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    params = {
+        "embed": L.embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(
+            ks[1], (cfg.d_model, cfg.vocab_size), cfg.d_model, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["layers"] = _stacked(
+            ks[2], cfg.num_layers,
+            lambda k: _dense_layer_init(k, cfg, dtype))
+    elif fam == "moe":
+        nd = cfg.moe.first_dense_layers
+        if nd:
+            params["layers_pre"] = [
+                _dense_layer_init(k, cfg, dtype, d_ff=cfg.moe.d_ff_dense)
+                for k in jax.random.split(ks[3], nd)]
+        params["layers"] = _stacked(
+            ks[2], cfg.num_layers - nd,
+            lambda k: _dense_layer_init(k, cfg, dtype, moe_layer=True))
+    elif fam == "ssm":
+        params["layers"] = _stacked(
+            ks[2], cfg.num_layers, lambda k: _ssm_layer_init(k, cfg, dtype))
+    elif fam == "hybrid":
+        kinds = cfg.block_kinds()
+        lks = jax.random.split(ks[2], cfg.num_layers)
+        params["layers"] = [
+            _rglru_layer_init(k, cfg, dtype) if kind == "rglru"
+            else _dense_layer_init(k, cfg, dtype)
+            for k, kind in zip(lks, kinds)]
+    elif fam == "encdec":
+        enc = cfg.encoder
+        ed = enc.d_model or cfg.d_model
+        params["layers"] = _stacked(
+            ks[2], cfg.num_layers, lambda k: _xattn_layer_init(k, cfg, dtype))
+        params["encoder"] = {
+            "layers": _stacked(
+                ks[4], enc.num_layers,
+                lambda k: _dense_layer_init(k, cfg, dtype)),
+            "final_norm": jnp.zeros((ed,), dtype),
+        }
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ======================================================================
+# shared pieces
+# ======================================================================
+def _embed(cfg, params, tokens):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _logits(cfg, params, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def _attn_nocache(cfg, lp, x, positions, mask, *, window=None):
+    h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+    impl = cfg.attention_impl
+    if cfg.mla is not None:
+        a, _ = mla_mod.mla_forward(lp["attn"], cfg, h, positions, mask,
+                                   impl=impl)
+    else:
+        q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, positions)
+        a = L.gqa_attention(q, k, v, mask, logit_softcap=None, impl=impl)
+        a = L.attn_output(lp["attn"], a)
+    return x + a
+
+
+def _mlp_block(cfg, lp, x, mesh, d_ff_kind=None):
+    h = L.rms_norm(x, lp["ln2"], cfg.rms_eps)
+    if "moe" in lp:
+        da = (tuple(n for n in mesh.axis_names if n != "model")
+              if mesh is not None else ("data",))
+        y, aux = moe_mod.moe_apply(lp["moe"], h, cfg, mesh, data_axes=da)
+    else:
+        y, aux = L.mlp_apply(lp["mlp"], h, d_ff_kind or cfg.mlp_kind), 0.0
+    return x + y, aux
+
+
+def _frontend_concat(cfg, x_tok, frontend_embeds):
+    """Prepend stub modality embeddings (vlm). Returns x [B, S_total, d]."""
+    if frontend_embeds is None:
+        return x_tok
+    return jnp.concatenate(
+        [frontend_embeds.astype(x_tok.dtype), x_tok], axis=1)
+
+
+# ======================================================================
+# teacher-forcing forward (training graph)
+# ======================================================================
+def forward(cfg, params, tokens, *, frontend_embeds=None, prefix_len=None,
+            enc_frames=None, mesh=None, remat: bool = False,
+            seq_spec=None):
+    """tokens [B, S_text] -> logits [B, S_total, V], aux loss scalar.
+
+    seq_spec: optional NamedSharding for the residual stream at layer
+    boundaries (Megatron-SP: the remat-saved activations shard their
+    sequence dim over 'model', cutting live-activation HBM by the TP
+    degree on the big train cells).
+    """
+    x = _embed(cfg, params, tokens)
+    x = _frontend_concat(cfg, x, frontend_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask = L.attention_mask(positions, positions, causal=True,
+                            window=cfg.sliding_window, prefix_len=prefix_len)
+    fam = cfg.family
+
+    def _sp(h):
+        if seq_spec is not None:
+            h = jax.lax.with_sharding_constraint(h, seq_spec)
+        return h
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            h = _attn_nocache(cfg, lp, _sp(carry), positions, mask)
+            h, aux = _mlp_block(cfg, lp, h, mesh)
+            return _sp(h), aux
+        if remat:
+            body = jax.checkpoint(body)
+        for lp in params.get("layers_pre", []):
+            x = _attn_nocache(cfg, lp, x, positions, mask)
+            x, _ = _mlp_block(cfg, lp, x, mesh)
+        x, auxs = _scan(body, x, params["layers"])
+        aux = jnp.sum(auxs) if fam == "moe" else 0.0
+
+    elif fam == "ssm":
+        def body(carry, lp):
+            h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+            y, _ = ssm_mod.mamba2_forward(lp["mixer"], cfg, h)
+            return carry + y, 0.0
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = _scan(body, x, params["layers"])
+        aux = 0.0
+
+    elif fam == "hybrid":
+        local_mask = L.attention_mask(
+            positions, positions, causal=True,
+            window=cfg.rglru.local_window)
+        for lp, kind in zip(params["layers"], cfg.block_kinds()):
+            if kind == "rglru":
+                h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+                y, _ = rg.recurrent_block_forward(lp["rec"], cfg, h)
+                x = x + y
+            else:
+                x = _attn_nocache(cfg, lp, x, positions, local_mask)
+            x, _ = _mlp_block(cfg, lp, x, mesh)
+        aux = 0.0
+
+    elif fam == "encdec":
+        enc_out = encode(cfg, params, enc_frames)
+        F = enc_out.shape[1]
+        x_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+        xmask = jnp.ones((B, S, F), bool)
+
+        def body(carry, lp):
+            h = _attn_nocache(cfg, lp, carry, positions, mask)
+            g = L.rms_norm(h, lp["ln_x"], cfg.rms_eps)
+            q = jnp.einsum("bsd,dhe->bshe", g, lp["xattn"]["wq"])
+            k = jnp.einsum("bsd,dhe->bshe", enc_out, lp["xattn"]["wk"])
+            v = jnp.einsum("bsd,dhe->bshe", enc_out, lp["xattn"]["wv"])
+            a = L.gqa_attention(q, k, v, xmask, impl=cfg.attention_impl)
+            h = h + L.attn_output(lp["xattn"], a)
+            h, _ = _mlp_block(cfg, lp, h, mesh)
+            return h, 0.0
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = _scan(body, x, params["layers"])
+        aux = 0.0
+    else:
+        raise ValueError(fam)
+
+    return _logits(cfg, params, x), aux
+
+
+def encode(cfg, params, frames):
+    """whisper encoder over stub frame embeddings [B, F, d]."""
+    enc = params["encoder"]
+    B, F, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) \
+        + L.sinusoidal_positions(F, d).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+    mask = jnp.ones((B, F, F), bool)
+
+    def body(carry, lp):
+        h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+        q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, positions,
+                                     rope=False)
+        a = L.gqa_attention(q, k, v, mask, impl=cfg.attention_impl)
+        h = carry + L.attn_output(lp["attn"], a)
+        h, _ = _mlp_block(cfg, lp, h, None)
+        return h, 0.0
+
+    x, _ = _scan(body, x, enc["layers"])
+    return L.rms_norm(x, enc["final_norm"], cfg.rms_eps)
+
+
+def loss_fn(cfg, params, batch, *, mesh=None, remat: bool = False,
+            seq_spec=None):
+    """batch: tokens [B,S], labels [B,S], optional weights/frames/patches."""
+    logits, aux = forward(
+        cfg, params, batch["tokens"],
+        frontend_embeds=batch.get("patches"),
+        enc_frames=batch.get("frames"),
+        prefix_len=batch.get("prefix_len"),
+        mesh=mesh, remat=remat, seq_spec=seq_spec)
+    labels = batch["labels"]
+    # frontend positions carry no labels
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    w = batch.get("weights", jnp.ones_like(ll))
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    ce = -jnp.sum(ll * w) / denom
+    # z-loss stabilizer
+    z = jnp.sum(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)) * w)
+    total = ce + Z_LOSS_COEF * z / denom + MOE_AUX_COEF * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ======================================================================
+# KV cache
+# ======================================================================
+def cache_window(cfg, capacity: int) -> int:
+    if cfg.family == "hybrid":
+        return min(capacity, cfg.rglru.local_window)
+    if cfg.sliding_window is not None:
+        return min(capacity, cfg.sliding_window)
+    return capacity
+
+
+def init_cache(cfg, batch: int, capacity: int, *, enc_frames: int = 0):
+    """Allocate an empty decode cache (ring buffers of W slots)."""
+    dtype = jnp.dtype(cfg.dtype)
+    W = cache_window(cfg, capacity)
+    hd = cfg.resolved_head_dim
+    cache = {"len": jnp.zeros((batch,), jnp.int32)}
+    fam = cfg.family
+    n_att = cfg.num_layers
+    if fam == "hybrid":
+        kinds = cfg.block_kinds()
+        n_att = sum(k == "local_attn" for k in kinds)
+        n_rec = sum(k == "rglru" for k in kinds)
+        w = cfg.rglru.lru_width or cfg.d_model
+        cache["rec_h"] = jnp.zeros((n_rec, batch, w), jnp.float32)
+        cache["rec_conv"] = jnp.zeros(
+            (n_rec, batch, cfg.rglru.conv_width - 1, w), dtype)
+    if fam == "ssm":
+        cx_shape, cbc_shape, state_shape = ssm_mod.mamba2_state_shape(
+            cfg, batch)
+        cache["conv_x"] = jnp.zeros((cfg.num_layers,) + cx_shape, dtype)
+        cache["conv_bc"] = jnp.zeros((cfg.num_layers,) + cbc_shape, dtype)
+        cache["ssm_state"] = jnp.zeros((cfg.num_layers,) + state_shape,
+                                       jnp.float32)
+        return cache
+    if cfg.mla is not None:
+        m = cfg.mla
+        cache["ckv"] = jnp.zeros((cfg.num_layers, batch, W, m.kv_lora_rank),
+                                 dtype)
+        cache["k_rope"] = jnp.zeros(
+            (cfg.num_layers, batch, W, m.rope_head_dim), dtype)
+    else:
+        cache["k"] = jnp.zeros((n_att, batch, W, cfg.num_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros((n_att, batch, W, cfg.num_kv_heads, hd), dtype)
+    cache["kv_pos"] = jnp.full((batch, W), -1, jnp.int32)
+    if fam == "encdec":
+        cache["cross_k"] = jnp.zeros(
+            (cfg.num_layers, batch, enc_frames, cfg.num_heads, hd), dtype)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def _ring_write(buf, slots, new):
+    """buf [B, W, ...], slots [B, S], new [B, S, ...] -> updated buf."""
+    B = buf.shape[0]
+    b_idx = jnp.arange(B)[:, None]
+    return buf.at[b_idx, slots].set(new.astype(buf.dtype), mode="drop")
+
+
+def _decode_mask(cfg, q_pos, kv_pos, window):
+    return L.attention_mask(q_pos, kv_pos, causal=True, window=window,
+                            kv_valid=kv_pos >= 0)
+
+
+# ======================================================================
+# prefill
+# ======================================================================
+def prefill(cfg, params, tokens, cache, *, frontend_embeds=None,
+            prefix_len=None, enc_frames=None, seq_lens=None, mesh=None):
+    """Run the full prompt, fill the cache. Returns (last_logits [B,V], cache).
+
+    Supports S > W (ring keeps the last W positions). ``seq_lens`` marks the
+    true per-row prompt length (padded rows produce masked cache slots).
+    """
+    x = _embed(cfg, params, tokens)
+    x = _frontend_concat(cfg, x, frontend_embeds)
+    B, S, _ = x.shape
+    if seq_lens is None:
+        seq_lens = jnp.full((B,), S, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    valid = positions < seq_lens[:, None]
+    mask = L.attention_mask(positions, positions, causal=True,
+                            window=cfg.sliding_window, prefix_len=prefix_len)
+    mask = mask & valid[:, None, :]
+    fam = cfg.family
+    W = (cache["kv_pos"].shape[1] if "kv_pos" in cache
+         else cache_window(cfg, S))
+    # ring slots; positions outside the last-W window are dropped
+    slots = jnp.where((positions >= S - W) & valid, positions % W, W)
+    if W == S:
+        # fresh full-capacity cache: the write is position-aligned, so an
+        # element-wise select replaces the scatter (a scatter with global
+        # batch indices forces SPMD to all-gather K/V over the data axis
+        # -- 17 GB/layer-pair at prefill_32k; see EXPERIMENTS #Perf)
+        def _pwrite(buf, new_vals):
+            keep = valid.reshape(valid.shape + (1,) * (new_vals.ndim - 2))
+            return jnp.where(keep, new_vals, 0).astype(buf.dtype)
+    else:
+        def _pwrite(buf, new_vals):
+            return _ring_write(buf, slots, new_vals)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(carry, xs):
+            lp, kc, vc = xs
+            h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+            if cfg.mla is not None:
+                a, (ckv, kr) = mla_mod.mla_forward(
+                    lp["attn"], cfg, h, positions, mask,
+                    impl=cfg.attention_impl)
+                kc = _pwrite(kc, ckv)
+                vc = _pwrite(vc, kr)
+            else:
+                q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, positions)
+                a = L.gqa_attention(q, k, v, mask,
+                                    impl=cfg.attention_impl)
+                a = L.attn_output(lp["attn"], a)
+                kc = _pwrite(kc, k)
+                vc = _pwrite(vc, v)
+            h = carry + a
+            h, _ = _mlp_block(cfg, lp, h, mesh)
+            return h, (kc, vc)
+
+        for i, lp in enumerate(params.get("layers_pre", [])):
+            names = ("ckv", "k_rope") if cfg.mla is not None else ("k", "v")
+            x, (kc, vc) = body(x, (lp, cache[names[0]][i], cache[names[1]][i]))
+            cache[names[0]] = cache[names[0]].at[i].set(kc)
+            cache[names[1]] = cache[names[1]].at[i].set(vc)
+        names = ("ckv", "k_rope") if cfg.mla is not None else ("k", "v")
+        npre = len(params.get("layers_pre", []))
+        x, (kcs, vcs) = _scan(
+            body, x, (params["layers"], cache[names[0]][npre:],
+                      cache[names[1]][npre:]))
+        cache[names[0]] = (jnp.concatenate([cache[names[0]][:npre], kcs])
+                           if npre else kcs)
+        cache[names[1]] = (jnp.concatenate([cache[names[1]][:npre], vcs])
+                           if npre else vcs)
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            lp, cxc, cbc, st = xs
+            h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+            y, (cxc, cbc, st) = ssm_mod.mamba2_forward(lp["mixer"], cfg, h)
+            return carry + y, (cxc, cbc, st)
+        x, (cxs, cbcs, states) = _scan(
+            body, x, (params["layers"], cache["conv_x"], cache["conv_bc"],
+                      cache["ssm_state"]))
+        cache["conv_x"], cache["conv_bc"] = cxs, cbcs
+        cache["ssm_state"] = states
+
+    elif fam == "hybrid":
+        local_mask = L.attention_mask(positions, positions, causal=True,
+                                      window=cfg.rglru.local_window)
+        local_mask = local_mask & valid[:, None, :]
+        ai = ri = 0
+        for lp, kind in zip(params["layers"], cfg.block_kinds()):
+            if kind == "rglru":
+                h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+                y, (cc, hl) = rg.recurrent_block_forward(lp["rec"], cfg, h)
+                cache["rec_conv"] = cache["rec_conv"].at[ri].set(
+                    cc.astype(cache["rec_conv"].dtype))
+                cache["rec_h"] = cache["rec_h"].at[ri].set(hl)
+                x = x + y
+                ri += 1
+            else:
+                h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+                q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, positions)
+                a = L.gqa_attention(q, k, v, local_mask,
+                                    impl=cfg.attention_impl)
+                x = x + L.attn_output(lp["attn"], a)
+                cache["k"] = cache["k"].at[ai].set(
+                    _pwrite(cache["k"][ai], k))
+                cache["v"] = cache["v"].at[ai].set(
+                    _pwrite(cache["v"][ai], v))
+                ai += 1
+            x, _ = _mlp_block(cfg, lp, x, mesh)
+
+    elif fam == "encdec":
+        enc_out = encode(cfg, params, enc_frames)
+        F = enc_out.shape[1]
+        xmask = jnp.ones((B, S, F), bool)
+
+        def body(carry, xs):
+            lp, kc, vc = xs
+            h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+            q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, positions)
+            a = L.gqa_attention(q, k, v, mask, impl=cfg.attention_impl)
+            h = carry + L.attn_output(lp["attn"], a)
+            kc = _pwrite(kc, k)
+            vc = _pwrite(vc, v)
+            g = L.rms_norm(h, lp["ln_x"], cfg.rms_eps)
+            qx = jnp.einsum("bsd,dhe->bshe", g, lp["xattn"]["wq"])
+            kx = jnp.einsum("bsd,dhe->bshe", enc_out, lp["xattn"]["wk"])
+            vx = jnp.einsum("bsd,dhe->bshe", enc_out, lp["xattn"]["wv"])
+            a = L.gqa_attention(qx, kx, vx, xmask,
+                                impl=cfg.attention_impl)
+            h = h + L.attn_output(lp["xattn"], a)
+            h, _ = _mlp_block(cfg, lp, h, mesh)
+            return h, (kc, vc, kx, vx)
+
+        x, (kcs, vcs, kxs, vxs) = _scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        cache["k"], cache["v"] = kcs, vcs
+        cache["cross_k"], cache["cross_v"] = kxs, vxs
+    else:
+        raise ValueError(fam)
+
+    if "kv_pos" in cache:
+        kv_pos = jnp.where(
+            (positions >= S - W) & valid, positions, -1)
+        if W == S:
+            cache["kv_pos"] = kv_pos
+        else:
+            cache["kv_pos"] = _ring_write(
+                jnp.full_like(cache["kv_pos"], -1), slots, kv_pos)
+    cache["len"] = seq_lens
+    logits = _logits(cfg, params, x)
+    last = jnp.take_along_axis(
+        logits, (seq_lens - 1)[:, None, None].clip(0), axis=1)[:, 0]
+    return last, cache
+
+
+# ======================================================================
+# decode
+# ======================================================================
+def decode_step(cfg, params, tokens, cache, *, mesh=None):
+    """tokens [B] -> (logits [B, V], cache). One AR step per sequence."""
+    B = tokens.shape[0]
+    x = _embed(cfg, params, tokens[:, None])
+    q_pos = cache["len"][:, None]                       # [B, 1]
+    fam = cfg.family
+
+    if fam == "ssm":
+        def body(carry, xs):
+            lp, cxc, cbc, st = xs
+            h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+            y, (cxc, cbc, st) = ssm_mod.mamba2_decode(lp["mixer"], cfg, h,
+                                                      (cxc, cbc), st)
+            return carry + y, (cxc, cbc, st)
+        x, (cxs, cbcs, states) = _scan(
+            body, x, (params["layers"], cache["conv_x"], cache["conv_bc"],
+                      cache["ssm_state"]))
+        cache["conv_x"], cache["conv_bc"] = cxs, cbcs
+        cache["ssm_state"] = states
+        cache["len"] = cache["len"] + 1
+        return _logits(cfg, params, x)[:, 0], cache
+
+    W = cache["kv_pos"].shape[1]
+    slots = cache["len"][:, None] % W                   # [B, 1]
+    window = (cfg.rglru.local_window if fam == "hybrid"
+              else cfg.sliding_window)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(carry, xs):
+            lp, kc, vc = xs
+            h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+            if cfg.mla is not None:
+                hq = h
+                new_ckv, new_kr = mla_mod._project_kv_latent(
+                    lp["attn"], cfg, hq, q_pos)
+                kc = _ring_write(kc, slots, new_ckv)
+                vc = _ring_write(vc, slots, new_kr)
+                kv_pos = cache["kv_pos"].at[
+                    jnp.arange(B)[:, None], slots].set(q_pos)
+                mask = _decode_mask(cfg, q_pos, kv_pos, window)
+                a, _ = mla_mod.mla_decode(lp["attn"], cfg, hq, q_pos,
+                                          kc, vc, mask)
+            else:
+                q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, q_pos)
+                kc = _ring_write(kc, slots, k)
+                vc = _ring_write(vc, slots, v)
+                kv_pos = cache["kv_pos"].at[
+                    jnp.arange(B)[:, None], slots].set(q_pos)
+                mask = _decode_mask(cfg, q_pos, kv_pos, window)
+                a = L.gqa_attention(q, kc, vc, mask)
+                a = L.attn_output(lp["attn"], a)
+            h = carry + a
+            h, _ = _mlp_block(cfg, lp, h, mesh)
+            return h, (kc, vc)
+
+        names = ("ckv", "k_rope") if cfg.mla is not None else ("k", "v")
+        for i, lp in enumerate(params.get("layers_pre", [])):
+            x, (kc, vc) = body(x, (lp, cache[names[0]][i],
+                                   cache[names[1]][i]))
+            cache[names[0]] = cache[names[0]].at[i].set(kc)
+            cache[names[1]] = cache[names[1]].at[i].set(vc)
+        npre = len(params.get("layers_pre", []))
+        x, (kcs, vcs) = _scan(
+            body, x, (params["layers"], cache[names[0]][npre:],
+                      cache[names[1]][npre:]))
+        cache[names[0]] = (jnp.concatenate([cache[names[0]][:npre], kcs])
+                           if npre else kcs)
+        cache[names[1]] = (jnp.concatenate([cache[names[1]][:npre], vcs])
+                           if npre else vcs)
+
+    elif fam == "hybrid":
+        ai = ri = 0
+        for lp, kind in zip(params["layers"], cfg.block_kinds()):
+            h = L.rms_norm(x, lp["ln1"], cfg.rms_eps)
+            if kind == "rglru":
+                y, (cc, hh) = rg.recurrent_block_decode(
+                    lp["rec"], cfg, h, cache["rec_conv"][ri],
+                    cache["rec_h"][ri])
+                cache["rec_conv"] = cache["rec_conv"].at[ri].set(
+                    cc.astype(cache["rec_conv"].dtype))
+                cache["rec_h"] = cache["rec_h"].at[ri].set(hh)
+                x = x + y
+                ri += 1
+            else:
+                q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, q_pos)
+                kc = _ring_write(cache["k"][ai], slots, k)
+                vc = _ring_write(cache["v"][ai], slots, v)
+                cache["k"] = cache["k"].at[ai].set(kc)
+                cache["v"] = cache["v"].at[ai].set(vc)
+                kv_pos = cache["kv_pos"].at[
+                    jnp.arange(B)[:, None], slots].set(q_pos)
+                mask = _decode_mask(cfg, q_pos, kv_pos, window)
+                a = L.gqa_attention(q, kc, vc, mask)
+                x = x + L.attn_output(lp["attn"], a)
+                ai += 1
+            x, _ = _mlp_block(cfg, lp, x, mesh)
+
+    elif fam == "encdec":
+        F = cache["cross_k"].shape[2]
+        xmask = jnp.ones((B, 1, F), bool)
+
+        def body(carry, xs):
+            lp, kc, vc, kx, vx = xs
+            h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+            q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, q_pos)
+            kc = _ring_write(kc, slots, k)
+            vc = _ring_write(vc, slots, v)
+            kv_pos = cache["kv_pos"].at[
+                jnp.arange(B)[:, None], slots].set(q_pos)
+            mask = _decode_mask(cfg, q_pos, kv_pos, window)
+            a = L.gqa_attention(q, kc, vc, mask)
+            h = carry + L.attn_output(lp["attn"], a)
+            g = L.rms_norm(h, lp["ln_x"], cfg.rms_eps)
+            qx = jnp.einsum("bsd,dhe->bshe", g, lp["xattn"]["wq"])
+            a = L.gqa_attention(qx, kx, vx, xmask)
+            h = h + L.attn_output(lp["xattn"], a)
+            h, _ = _mlp_block(cfg, lp, h, mesh)
+            return h, (kc, vc)
+
+        x, (kcs, vcs) = _scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        cache["k"], cache["v"] = kcs, vcs
+    else:
+        raise ValueError(fam)
+
+    if "kv_pos" in cache:
+        cache["kv_pos"] = cache["kv_pos"].at[
+            jnp.arange(B)[:, None], slots].set(q_pos)
+    cache["len"] = cache["len"] + 1
+    return _logits(cfg, params, x)[:, 0], cache

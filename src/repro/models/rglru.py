@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(-c * softplus(Lambda) * r_t), c = 8, and r/i sigmoid gates.
+Gates use BLOCK-DIAGONAL weights (the published diagonalized RG-LRU) —
+each of NUM_BLOCKS channel blocks is independent, which both matches the
+reference implementation and makes the whole recurrence embarrassingly
+shardable across the tensor-parallel axis.
+Train/prefill uses an associative scan; decode is a single recurrence step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.ssm import causal_conv1d
+
+_C = 8.0
+NUM_BLOCKS = 16
+
+
+def rglru_init(key, d_model: int, width: int, conv_width: int, dtype):
+    ks = jax.random.split(key, 6)
+    nb = NUM_BLOCKS if width % NUM_BLOCKS == 0 else 1
+    bw = width // nb
+    return {
+        "in_gate": dense_init(ks[0], (d_model, width), d_model, dtype),
+        "in_rec": dense_init(ks[1], (d_model, width), d_model, dtype),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, width), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": jax.vmap(lambda k: dense_init(k, (bw, bw), bw, jnp.float32))(
+            jax.random.split(ks[3], nb)),
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_x": jax.vmap(lambda k: dense_init(k, (bw, bw), bw, jnp.float32))(
+            jax.random.split(ks[4], nb)),
+        "b_x": jnp.zeros((width,), jnp.float32),
+        # init so a ~ uniform decay in [0.9, 0.999]
+        "lam": jnp.linspace(-2.0, 2.0, width, dtype=jnp.float32),
+        "out": dense_init(ks[5], (width, d_model), width, dtype),
+    }
+
+
+def _block_linear(w, x):
+    """Block-diagonal matmul: w [nb, bw, bw], x [..., nb*bw]."""
+    nb, bw, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, bw))
+    yb = jnp.einsum("...nk,nkj->...nj", xb, w)
+    return yb.reshape(x.shape)
+
+
+def _gates(params, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_linear(params["w_a"], xf) + params["b_a"])
+    i = jax.nn.sigmoid(_block_linear(params["w_x"], xf) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r      # [b, ., w]
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xf)
+    return log_a, gated
+
+
+def rglru_scan(params, x, h0=None):
+    """x [b, s, w] -> (y [b, s, w] f32, h_last [b, w] f32)."""
+    log_a, gated = _gates(params, x)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, y = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        y = y + aa * h0[:, None, :]
+    return y, y[:, -1, :]
+
+
+def rglru_step(params, x, h):
+    """x [b, 1, w], h [b, w] -> (y [b, 1, w], h')."""
+    log_a, gated = _gates(params, x)
+    h = jnp.exp(log_a[:, 0]) * h + gated[:, 0]
+    return h[:, None, :], h
+
+
+def recurrent_block_forward(params, cfg, x, conv_cache=None, h0=None):
+    """Full Griffin recurrent block: (gelu gate) * (conv -> RG-LRU)."""
+    gate = jax.nn.gelu(x @ params["in_gate"])
+    rec = x @ params["in_rec"]
+    rec, conv_cache = causal_conv1d(rec, params["conv_w"], conv_cache)
+    rec = rec + params["conv_b"]
+    y, h_last = rglru_scan(params, rec, h0)
+    out = (gate * y.astype(x.dtype)) @ params["out"]
+    return out, (conv_cache, h_last)
+
+
+def recurrent_block_decode(params, cfg, x, conv_cache, h):
+    gate = jax.nn.gelu(x @ params["in_gate"])
+    rec = x @ params["in_rec"]
+    rec, conv_cache = causal_conv1d(rec, params["conv_w"], conv_cache)
+    rec = rec + params["conv_b"]
+    y, h = rglru_step(params, rec, h)
+    out = (gate * y.astype(x.dtype)) @ params["out"]
+    return out, (conv_cache, h)

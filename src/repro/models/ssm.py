@@ -1,0 +1,206 @@
+"""Mamba2 mixer — chunked state-space duality (SSD), pure jnp.
+
+Port of the published minimal SSD algorithm (arXiv:2405.21060 listing 1) to
+JAX. This is both the training/prefill path and the oracle the
+``kernels/ssd_scan`` Pallas kernel is validated against.
+
+Projections are kept as separate matrices (w_z / w_x / w_B / w_C / w_dt and
+separate depthwise convs for x vs B/C) rather than one fused in_proj: the
+x/dt/z paths are head-sharded under tensor parallelism while the grouped
+B/C paths are replicated — a fused matrix cannot carry a mixed
+PartitionSpec (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def segsum(x):
+    """x [..., T] -> lower-triangular segment sums [..., T, T] (log-space)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, seg, NEG_INF)
+
+
+def ssd_chunked(X, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD.
+
+    X: [b, l, h, p] (pre-multiplied by dt), A: [b, l, h] log-decay (dt*A_cont),
+    B, C: [b, l, h, n]. Returns (Y [b, l, h, p], final_state [b, h, p, n]).
+    """
+    b, l, h, p = X.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    Xc = X.reshape(b, nc, chunk, h, p)
+    Ac = A.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)      # [b,h,c,l]
+    Bc = B.reshape(b, nc, chunk, h, n)
+    Cc = C.reshape(b, nc, chunk, h, n)
+    A_cumsum = jnp.cumsum(Ac, axis=-1)                         # [b,h,c,l]
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(segsum(Ac))                                    # [b,h,c,l,s]
+    Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cc, Bc, L, Xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)      # [b,h,c,l]
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bc, decay_states, Xc)
+
+    # 3. inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros_like(states[:, :1])
+    else:
+        initial_state = initial_state[:, None]                 # [b,1,h,p,n]
+    states = jnp.concatenate([initial_state, states], axis=1)  # [b,nc+1,...]
+    pad = jnp.pad(A_cumsum[..., -1], ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(segsum(pad))                         # [b,h,nc+1,nc+1]
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output contribution
+    state_decay_out = jnp.exp(A_cumsum)                        # [b,h,c,l]
+    Y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc, prev_states,
+                       state_decay_out)
+    Y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return Y, final_state
+
+
+def ssd_decode_step(state, x, dA, dBx_B, C):
+    """Single-token recurrence. state [b,h,p,n], x [b,h,p], dA [b,h],
+    dBx_B [b,h,n] (dt-scaled B), C [b,h,n]."""
+    state = state * jnp.exp(dA)[..., None, None] \
+        + x[..., :, None] * dBx_B[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, C)
+    return state, y
+
+
+# ----------------------------------------------------------------- block
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal conv. x [b, l, ch], w [cw, ch].
+
+    Returns (y [b, l, ch], new_cache [b, cw-1, ch]).
+    """
+    cw = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([cache, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw))
+    new_cache = xp[:, -(cw - 1):, :] if cw > 1 else cache
+    return y, new_cache
+
+
+def mamba2_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = d * s.expand
+    nheads = d_in // s.head_dim
+    gn = s.num_groups * s.state_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], (d, d_in), d, dtype),
+        "w_x": dense_init(ks[1], (d, d_in), d, dtype),
+        "w_B": dense_init(ks[2], (d, gn), d, dtype),
+        "w_C": dense_init(ks[3], (d, gn), d, dtype),
+        "w_dt": dense_init(ks[4], (d, nheads), d, dtype),
+        "conv_x": (jax.random.normal(ks[5], (s.conv_width, d_in),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_bc": (jax.random.normal(ks[6], (s.conv_width, 2 * gn),
+                                      jnp.float32) * 0.1).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * gn,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[7], (d_in, d), d_in, dtype),
+    }
+
+
+def _project(params, cfg, u, conv_x_cache, conv_bc_cache):
+    """Shared projection + conv for forward/decode."""
+    s = cfg.ssm
+    gn = s.num_groups * s.state_dim
+    nheads = (cfg.d_model * s.expand) // s.head_dim
+    z = u @ params["w_z"]
+    x = u @ params["w_x"]
+    bc = jnp.concatenate([u @ params["w_B"], u @ params["w_C"]], axis=-1)
+    dt_raw = u @ params["w_dt"]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    x, conv_x_cache = causal_conv1d(x, params["conv_x"], conv_x_cache)
+    x = jax.nn.silu(x + params["conv_x_b"])
+    bc, conv_bc_cache = causal_conv1d(bc, params["conv_bc"], conv_bc_cache)
+    bc = jax.nn.silu(bc + params["conv_bc_b"])
+    B, C = bc[..., :gn], bc[..., gn:]
+    return z, x, B, C, dt, conv_x_cache, conv_bc_cache
+
+
+def mamba2_forward(params, cfg, u, conv_caches=None, ssm_state=None):
+    """u [b, l, d] -> (y [b, l, d], (conv_x_c, conv_bc_c, ssm_state))."""
+    s = cfg.ssm
+    b, l, d = u.shape
+    d_in = d * s.expand
+    nheads = d_in // s.head_dim
+    cxc, cbc = conv_caches if conv_caches is not None else (None, None)
+    z, x, B, C, dt, cxc, cbc = _project(params, cfg, u, cxc, cbc)
+    x = x.reshape(b, l, nheads, s.head_dim)
+    rep = nheads // s.num_groups
+    Bh = jnp.repeat(B.reshape(b, l, s.num_groups, s.state_dim), rep, axis=2)
+    Ch = jnp.repeat(C.reshape(b, l, s.num_groups, s.state_dim), rep, axis=2)
+    A = -jnp.exp(params["A_log"])                              # [h]
+    chunk = min(s.chunk_size, l)
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    X = (x.astype(jnp.float32) * dt[..., None])
+    Y, ssm_state = ssd_chunked(X, dt * A, Bh.astype(jnp.float32),
+                               Ch.astype(jnp.float32), chunk,
+                               initial_state=ssm_state)
+    Y = Y[:, :l]
+    x = x[:, :l]
+    Y = Y + params["D"][:, None] * x.astype(jnp.float32)
+    y = Y.reshape(b, l, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    return y @ params["out_proj"], (cxc, cbc, ssm_state)
+
+
+def mamba2_decode(params, cfg, u, conv_caches, ssm_state):
+    """u [b, 1, d] single-token step with recurrent state update."""
+    s = cfg.ssm
+    b = u.shape[0]
+    d_in = cfg.d_model * s.expand
+    nheads = d_in // s.head_dim
+    cxc, cbc = conv_caches
+    z, x, B, C, dt, cxc, cbc = _project(params, cfg, u, cxc, cbc)
+    x = x.reshape(b, nheads, s.head_dim).astype(jnp.float32)
+    rep = nheads // s.num_groups
+    Bh = jnp.repeat(B.reshape(b, s.num_groups, s.state_dim), rep, axis=1)
+    Ch = jnp.repeat(C.reshape(b, s.num_groups, s.state_dim), rep, axis=1)
+    dt1 = dt[:, 0]                                             # [b, h]
+    A = -jnp.exp(params["A_log"])
+    ssm_state, y = ssd_decode_step(
+        ssm_state, x * dt1[..., None], dt1 * A,
+        Bh.astype(jnp.float32), Ch.astype(jnp.float32))
+    y = y + params["D"][:, None] * x
+    y = y.reshape(b, 1, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    return y @ params["out_proj"], (cxc, cbc, ssm_state)
+
+
+def mamba2_state_shape(cfg, batch: int):
+    s = cfg.ssm
+    d_in = cfg.d_model * s.expand
+    nheads = d_in // s.head_dim
+    gn = s.num_groups * s.state_dim
+    return ((batch, s.conv_width - 1, d_in),        # conv_x cache
+            (batch, s.conv_width - 1, 2 * gn),      # conv_bc cache
+            (batch, nheads, s.head_dim, s.state_dim))

@@ -1,0 +1,195 @@
+"""Real-model realtime engine — the CPU-runnable data plane.
+
+Drives an actual JAX model (prefill + slot-batched decode) under the
+LiveServe control plane: each round the UrgencyScheduler picks which
+sessions advance; unscheduled slots are held by rewinding their cache
+length (their KV slot is overwritten on the next committed step, so
+scheduling affects *when* tokens are produced, never *which* — the
+paper's correctness contract, verified in tests/test_real_engine.py).
+
+This is the TPU-idiomatic static-slot continuous batching of DESIGN.md §3
+(JetStream-style): fixed decode batch, scheduler fills slots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kv_manager import KVManager
+from repro.core.monitor import RuntimeMonitor
+from repro.core.scheduler import RoundBudget, SchedulerConfig, \
+    UrgencyScheduler
+from repro.core.session import Phase, Request, RequestState
+from repro.models import decode_step, init_cache, init_params, prefill
+
+
+@dataclass
+class SlotState:
+    session_id: str
+    request: Request
+    pending_token: int              # next token to feed
+    tokens: List[int] = field(default_factory=list)
+
+
+class RealtimeLLMEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, capacity: int = 256,
+                 clock=None, scheduler: Optional[UrgencyScheduler] = None,
+                 kv: Optional[KVManager] = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.capacity = capacity
+        self.clock = clock or _StepClock()
+        self.monitor = RuntimeMonitor(self.clock)
+        self.kv = kv or KVManager(
+            capacity_blocks=slots * (capacity // 16) * 2, block_size=16,
+            bytes_per_token=1024.0, monitor=self.monitor, clock=self.clock)
+        self.scheduler = scheduler or UrgencyScheduler(
+            SchedulerConfig(), self.monitor, stage="thinker",
+            kv_occupancy=self.kv.occupancy)
+        self.cache = init_cache(cfg, slots, capacity)
+        self.slot_state: Dict[int, Optional[SlotState]] = {
+            i: None for i in range(slots)}
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(cfg, p, t, c))
+
+    # ------------------------------------------------------------ admit
+    def free_slot(self) -> Optional[int]:
+        for i, s in self.slot_state.items():
+            if s is None:
+                return i
+        return None
+
+    def add_session(self, session_id: str, prompt: np.ndarray,
+                    max_new_tokens: int) -> int:
+        """Prefill the prompt into a free slot; returns the slot id."""
+        slot = self.free_slot()
+        assert slot is not None, "no free decode slot"
+        self.monitor.register(session_id)
+        prompt = jnp.asarray(prompt, jnp.int32)[None, :]
+        # slot-isolated prefill: run a B=1 prefill then graft into the slot
+        c1 = init_cache(self.cfg, 1, self.capacity)
+        logits, c1 = prefill(self.cfg, self.params, prompt, c1)
+        self.cache = jax.tree.map(
+            lambda buf, one: buf.at[_slot_index(buf, self.slots, slot)].set(
+                one[0]) if buf.ndim >= 1 else buf,
+            self.cache, _broadcast_like(c1, self.cache, self.slots))
+        self.cache = _set_len(self.cache, slot, int(c1["len"][0]))
+        req = Request(session_id=session_id, stage="thinker", turn_index=0,
+                      arrival_time=self.clock.now(),
+                      prompt_len=int(prompt.shape[1]),
+                      max_new_tokens=max_new_tokens)
+        req.phase = Phase.DECODE
+        req.prefilled = req.prompt_len
+        self.kv.pin(session_id)
+        self.kv.try_allocate_working(
+            self.kv.blocks_of(req.prompt_len), self.clock.now())
+        tok = int(jnp.argmax(logits[0]))
+        self.slot_state[slot] = SlotState(session_id, req, tok, [tok])
+        return slot
+
+    def abort(self, session_id: str) -> None:
+        """Barge-in: drop the in-flight request, keep committed KV."""
+        for i, s in self.slot_state.items():
+            if s and s.session_id == session_id:
+                s.request.state = RequestState.ABORTED
+                self.kv.commit_turn(session_id,
+                                    s.request.total_context,
+                                    self.clock.now())
+                self.slot_state[i] = None
+
+    # ------------------------------------------------------------ rounds
+    def active(self) -> List[SlotState]:
+        return [s for s in self.slot_state.values()
+                if s is not None and s.request.is_live()
+                and s.request.generated < s.request.max_new_tokens]
+
+    def step(self) -> List[int]:
+        """One scheduling round + one batched decode. Returns scheduled
+        slot ids."""
+        self.clock.tick()
+        act = self.active()
+        if not act:
+            return []
+        budget = RoundBudget(token_budget=self.slots,
+                             free_kv_blocks=self.kv.free_blocks
+                             + self.kv.capacity)
+        decision = self.scheduler.schedule(
+            [s.request for s in act], budget, self.clock.now())
+        sched_ids = {r.req_id for r in decision.batch}
+        sched_slots = [i for i, s in self.slot_state.items()
+                       if s and s.request.req_id in sched_ids]
+        if not sched_slots:
+            return []
+        tokens = jnp.asarray(
+            [self.slot_state[i].pending_token
+             if self.slot_state[i] else 0 for i in range(self.slots)],
+            jnp.int32)
+        mask = np.zeros((self.slots,), bool)
+        mask[sched_slots] = True
+        logits, new_cache = self._decode(self.params, tokens, self.cache)
+        # hold unscheduled slots: rewind their cache length by one (their
+        # stale KV entry is overwritten the next time they are scheduled)
+        new_len = jnp.where(jnp.asarray(mask), new_cache["len"],
+                            new_cache["len"] - 1)
+        new_cache["len"] = new_len
+        self.cache = new_cache
+        nxt = jnp.argmax(logits, axis=-1)
+        for i in sched_slots:
+            s = self.slot_state[i]
+            s.request.generated += 1
+            if s.request.first_output_time is None:
+                s.request.first_output_time = self.clock.now()
+            tok = int(nxt[i])
+            s.pending_token = tok
+            if s.request.generated < s.request.max_new_tokens:
+                s.tokens.append(tok)
+            else:
+                s.request.state = RequestState.FINISHED
+                self.kv.commit_turn(s.session_id, s.request.total_context,
+                                    self.clock.now())
+        return sched_slots
+
+    def run_to_completion(self, max_rounds: int = 10_000) -> Dict[str, list]:
+        for _ in range(max_rounds):
+            if not self.active():
+                break
+            self.step()
+        return {s.session_id: s.tokens
+                for s in self.slot_state.values() if s is not None}
+
+
+# ---------------------------------------------------------------- helpers
+class _StepClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def tick(self, dt: float = 0.01):
+        self.t += dt
+
+    def now(self):
+        return self.t
+
+
+def _slot_index(buf, slots: int, slot: int):
+    """Cache leaves are [L, B, ...] or [B, ...]; find the B axis."""
+    if buf.ndim >= 2 and buf.shape[1] == slots:
+        return (slice(None), slot)
+    return (slot,)
+
+
+def _broadcast_like(one_cache, slot_cache, slots: int):
+    """Pad a B=1 cache pytree so leaf shapes line up for grafting."""
+    def pad(one, full):
+        return one
+    return jax.tree.map(pad, one_cache, slot_cache)
+
+
+def _set_len(cache, slot: int, value: int):
+    cache = dict(cache)
+    cache["len"] = cache["len"].at[slot].set(value)
+    return cache

@@ -1,0 +1,106 @@
+"""Workload generators — the paper's three data sources + arrival processes.
+
+- sharegpt: single-turn conversational prompts, wide prompt/response
+  spread (ShareGPT-Chinese-English-90K-like length distributions).
+- interactive: multi-turn voice sessions with think-time gaps and growing
+  context (retained interaction traces of the paper).
+- mixed: interactive sessions + video events with large prefill
+  (StreamingBench-like media turns).
+
+Arrivals: closed-loop concurrency bound c (the paper's frontier sweeps),
+open-loop Poisson, and BurstGPT-like bursty arrivals (Gamma-modulated
+rate spikes). Barge-in: per-request Bernoulli(p_bi), cut anchored at TTFP
+plus a draw from the output-audio-duration distribution (§7.1).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.session import Session, Turn
+
+
+@dataclass
+class WorkloadConfig:
+    kind: str = "sharegpt"           # sharegpt | interactive | mixed
+    num_sessions: int = 32
+    p_barge_in: float = 0.0
+    seed: int = 0
+    # closed loop
+    concurrency: Optional[int] = None
+    # open loop
+    arrival: str = "poisson"         # poisson | burstgpt
+    rate_rps: float = 2.0
+    burst_factor: float = 4.0        # peak/mean rate for burstgpt
+    burst_period_s: float = 20.0
+    audio_per_token_s: float = 0.08
+
+
+def _lognormal(rng, mean, sigma, lo, hi):
+    v = rng.lognormal(math.log(mean), sigma)
+    return float(min(max(v, lo), hi))
+
+
+def _make_turns(rng, cfg: WorkloadConfig, kind: str) -> List[Turn]:
+    turns = []
+    if kind == "sharegpt":
+        n_turns = 1
+    elif kind == "interactive":
+        n_turns = int(rng.integers(3, 8))
+    else:  # mixed: interactive with a chance of a video-heavy turn
+        n_turns = int(rng.integers(2, 6))
+    for i in range(n_turns):
+        if kind == "sharegpt":
+            prompt = int(_lognormal(rng, 600, 0.8, 40, 6000))
+            resp_audio_s = _lognormal(rng, 22, 0.7, 3, 90)
+        elif kind == "interactive":
+            prompt = int(_lognormal(rng, 120, 0.6, 20, 1200))
+            resp_audio_s = _lognormal(rng, 12, 0.6, 2, 60)
+        else:
+            video = rng.random() < 0.35
+            prompt = int(_lognormal(rng, 4000 if video else 150, 0.5,
+                                    30, 10000))
+            resp_audio_s = _lognormal(rng, 15, 0.6, 2, 70)
+        resp_tokens = max(8, int(resp_audio_s / cfg.audio_per_token_s))
+        barge = rng.random() < cfg.p_barge_in
+        cut = float(rng.uniform(0.15, 0.75)) * resp_audio_s if barge else 0.0
+        speech_dur = _lognormal(rng, 2.5, 0.5, 0.6, 8.0)
+        turns.append(Turn(index=i, speech_start=0.0, speech_end=speech_dur,
+                          prompt_len=prompt, response_tokens=resp_tokens,
+                          barge_in=barge, barge_cut_s=cut))
+    return turns
+
+
+def _arrival_times(rng, cfg: WorkloadConfig) -> List[float]:
+    if cfg.concurrency is not None:
+        # closed loop: session k>=c starts when an earlier one finishes;
+        # the simulator handles gating, we just mark the first c at t=0.
+        return [0.0] * cfg.num_sessions
+    times, t = [], 0.0
+    for i in range(cfg.num_sessions):
+        if cfg.arrival == "poisson":
+            t += rng.exponential(1.0 / cfg.rate_rps)
+        else:  # burstgpt-like: rate modulated by a square burst wave
+            phase = (t % cfg.burst_period_s) / cfg.burst_period_s
+            rate = cfg.rate_rps * (cfg.burst_factor if phase < 0.3
+                                   else max(0.1, (1 - 0.3 * cfg.burst_factor)
+                                            / 0.7))
+            t += rng.exponential(1.0 / max(rate, 1e-3))
+        times.append(t)
+    return times
+
+
+def generate(cfg: WorkloadConfig) -> List[Session]:
+    rng = np.random.default_rng(cfg.seed)
+    arrivals = _arrival_times(rng, cfg)
+    sessions = []
+    for i, t0 in enumerate(arrivals):
+        turns = _make_turns(rng, cfg, cfg.kind)
+        think = _lognormal(rng, 2.0, 0.5, 0.5, 8.0)
+        sessions.append(Session(
+            session_id=f"s{i:04d}", turns=turns, arrival_time=t0,
+            think_time_s=think))
+    return sessions

@@ -1,0 +1,129 @@
+"""Checkpoint / restart — the fault-tolerance substrate.
+
+Atomic-manifest checkpoints: every leaf saved as its own .npy under a
+step directory, manifest written LAST (a crash mid-save never yields a
+readable-but-corrupt checkpoint). An async mode moves the host-side write
+off the training step (overlap with compute). ``restore_checkpoint``
+re-shards onto whatever mesh the restart runs with — including a
+*different* device count (elastic rescale, DESIGN.md §7): leaves are
+host-side numpy, placement happens via the target shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat):
+    root: dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return _fix_lists(root)
+
+
+def _fix_lists(node):
+    if not isinstance(node, dict):
+        return node
+    keys = list(node.keys())
+    if keys and all(k.isdigit() for k in keys):
+        return [_fix_lists(node[str(i)]) for i in range(len(keys))]
+    return {k: _fix_lists(v) for k, v in node.items()}
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state=None, *,
+                    async_save: bool = False,
+                    keep_last: int = 3) -> Optional[threading.Thread]:
+    """Write step checkpoint; manifest last (atomic)."""
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt_state"] = opt_state
+    flat = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in flat.items()}   # device -> host
+
+    def _write():
+        step_dir = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+        os.makedirs(step_dir, exist_ok=True)
+        names = {}
+        for i, (k, v) in enumerate(host.items()):
+            fn = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(step_dir, fn), v)
+            names[k] = {"file": fn, "dtype": str(v.dtype),
+                        "shape": list(v.shape)}
+        manifest = {"step": step, "leaves": names}
+        with open(os.path.join(step_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(step_dir, final)
+        _gc(ckpt_dir, keep_last)
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None, *,
+                       shardings=None):
+    """Load (tree, step). ``shardings``: optional pytree of NamedSharding
+    to place leaves onto a (possibly different-size) mesh — elastic
+    restart path."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for k, info in manifest["leaves"].items():
+        flat[k] = np.load(os.path.join(step_dir, info["file"]))
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_s = _flatten(shardings)
+        flat_t = _flatten(tree)
+        placed = {k: jax.device_put(v, flat_s[k]) if k in flat_s else v
+                  for k, v in flat_t.items()}
+        tree = _unflatten(placed)
+    return tree, step

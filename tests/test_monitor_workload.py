@@ -1,0 +1,104 @@
+"""Property tests: playback timeline invariants + workload generators."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.monitor import PlaybackState, RuntimeMonitor
+from repro.serving.workload import WorkloadConfig, generate
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self):
+        return self.t
+
+
+@settings(max_examples=200, deadline=None)
+@given(events=st.lists(
+    st.tuples(st.floats(0.0, 5.0),      # dt until next append
+              st.floats(0.01, 4.0)),    # appended audio seconds
+    min_size=1, max_size=30))
+def test_playback_invariants(events):
+    pb = PlaybackState()
+    t = 0.0
+    total = 0.0
+    for dt, dur in events:
+        t += dt
+        pb.append(t, dur)
+        total += dur
+        # buffer never negative, never exceeds appended audio
+        assert 0.0 <= pb.buffer_s(t) <= total + 1e-9
+        # consumed + buffered == appended
+        assert abs(pb.consumed_s(t) + pb.buffer_s(t) - total) < 1e-6
+        # gaps only grow, max_gap <= total gap
+        assert pb.max_gap_s <= pb.gap_s + 1e-9
+    # after the buffer drains, consumed == appended
+    assert abs(pb.consumed_s(pb.play_end + 1.0) - total) < 1e-6
+
+
+def test_monitor_reply_gap_ema_updates():
+    clock = FakeClock()
+    mon = RuntimeMonitor(clock, workload_reply_gap_prior=2.0)
+    assert mon.reply_gap_s("new") == 2.0          # prior fallback
+    mon.register("s")
+    mon.on_audio("s", 1.0)
+    clock.t = 1.0
+    mon.on_response_complete("s")
+    clock.t = 4.0                                  # 3s think time
+    mon.on_speech_start("s")
+    assert abs(mon.reply_gap_s("s") - 3.0) < 1e-6
+    clock.t = 10.0
+    mon.on_response_complete("s")
+    clock.t = 11.0                                 # 1s think time
+    mon.on_speech_start("s")
+    g = mon.reply_gap_s("s")
+    assert 1.0 < g < 3.0                           # EMA between samples
+
+
+def test_barge_in_marks_immediate_reuse():
+    clock = FakeClock()
+    mon = RuntimeMonitor(clock)
+    mon.register("s")
+    assert not mon.immediate_reuse("s")
+    mon.on_barge_in("s")
+    assert mon.immediate_reuse("s")
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), pbi=st.sampled_from([0.0, 0.5, 1.0]))
+def test_workload_generator_properties(seed, pbi):
+    cfg = WorkloadConfig(kind="interactive", num_sessions=20, seed=seed,
+                         p_barge_in=pbi, concurrency=4)
+    sessions = generate(cfg)
+    assert len(sessions) == 20
+    again = generate(cfg)
+    for a, b in zip(sessions, again):              # deterministic
+        assert a.session_id == b.session_id
+        assert [t.prompt_len for t in a.turns] == \
+            [t.prompt_len for t in b.turns]
+    turns = [t for s in sessions for t in s.turns]
+    assert all(3 <= len(s.turns) <= 8 for s in sessions)
+    assert all(t.prompt_len >= 20 and t.response_tokens >= 8
+               for t in turns)
+    if pbi == 0.0:
+        assert not any(t.barge_in for t in turns)
+    if pbi == 1.0:
+        assert all(t.barge_in for t in turns)
+        assert all(0 < t.barge_cut_s < 60 for t in turns)
+
+
+def test_arrival_processes():
+    pois = generate(WorkloadConfig(kind="sharegpt", num_sessions=50,
+                                   arrival="poisson", rate_rps=5.0, seed=1))
+    times = [s.arrival_time for s in pois]
+    assert times == sorted(times)
+    mean_gap = np.mean(np.diff([0] + times))
+    assert 0.05 < mean_gap < 0.6                   # ~1/5 rps
+    burst = generate(WorkloadConfig(kind="sharegpt", num_sessions=50,
+                                    arrival="burstgpt", rate_rps=5.0,
+                                    seed=1))
+    gaps = np.diff([0] + [s.arrival_time for s in burst])
+    # bursty arrivals: higher dispersion than poisson
+    assert np.std(gaps) / np.mean(gaps) > 0.8

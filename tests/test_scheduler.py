@@ -1,0 +1,177 @@
+"""Unit + property tests for the urgency scheduler (paper §4)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.monitor import RuntimeMonitor
+from repro.core.scheduler import (FCFSScheduler, RoundBudget,
+                                  SchedulerConfig, UrgencyScheduler)
+from repro.core.session import Phase, Request
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def now(self):
+        return self.t
+
+
+def mk_req(sid, stage="talker", arrival=0.0, prompt=0, gen=0, target=100):
+    r = Request(session_id=sid, stage=stage, turn_index=0,
+                arrival_time=arrival, prompt_len=prompt,
+                max_new_tokens=target)
+    if prompt == 0:
+        r.phase = Phase.DECODE
+    r.generated = gen
+    if gen:
+        r.first_output_time = arrival
+    return r
+
+
+def setup(buffers, *, p_safe=1.0, p_max=3.0, occ=0.0, started=None):
+    """buffers: sid -> playback buffer seconds (None = no telemetry)."""
+    clock = FakeClock(100.0)
+    mon = RuntimeMonitor(clock)
+    started = started or {}
+    for sid, buf in buffers.items():
+        if buf is None:
+            continue
+        mon.register(sid)
+        v = mon.view(sid)
+        if started.get(sid, True):
+            v.playback.started = True
+            v.playback.play_end = clock.t + buf
+            v.playback.appended_s = buf + 5.0
+    cfg = SchedulerConfig(p_safe_s=p_safe, p_max_s=p_max)
+    sched = UrgencyScheduler(
+        cfg, mon, stage="talker",
+        kv_occupancy=lambda: occ)
+    return sched, clock
+
+
+def test_u0_beats_u1_beats_u2():
+    sched, clock = setup({"a": 0.5, "b": 2.0})
+    # a: started, buffer 0.5 <= p_safe -> U0
+    ra = mk_req("a", gen=10)
+    # b: started, buffer 2.0 -> U2
+    rb = mk_req("b", gen=10)
+    # c: no playback yet -> U1
+    rc = mk_req("c", arrival=50.0, prompt=100)
+    budget = RoundBudget(token_budget=4096, free_kv_blocks=10**6)
+    d = sched.schedule([rb, rc, ra], budget, clock.now())
+    assert [r.session_id for r in d.batch] == ["a", "c", "b"]
+    assert d.classes[ra.req_id] == 0
+    assert d.classes[rc.req_id] == 1
+    assert d.classes[rb.req_id] == 2
+
+
+def test_u0_sorted_by_buffer_ascending():
+    sched, clock = setup({"a": 0.9, "b": 0.1, "c": 0.5})
+    reqs = [mk_req(s, gen=5) for s in ("a", "b", "c")]
+    budget = RoundBudget(token_budget=4096, free_kv_blocks=10**6)
+    d = sched.schedule(reqs, budget, clock.now())
+    assert [r.session_id for r in d.batch] == ["b", "c", "a"]
+
+
+def test_u1_fcfs_aging_oldest_first():
+    sched, clock = setup({})
+    r1 = mk_req("a", arrival=10.0, prompt=64)
+    r2 = mk_req("b", arrival=5.0, prompt=64)
+    budget = RoundBudget(token_budget=4096, free_kv_blocks=10**6)
+    d = sched.schedule([r1, r2], budget, clock.now())
+    assert [r.session_id for r in d.batch] == ["b", "a"]
+
+
+def test_pacing_holds_far_ahead_sessions():
+    sched, clock = setup({"a": 10.0, "b": 2.0})
+    ra, rb = mk_req("a", gen=5), mk_req("b", gen=5)
+    budget = RoundBudget(token_budget=4096, free_kv_blocks=10**6)
+    d = sched.schedule([ra, rb], budget, clock.now())
+    assert [r.session_id for r in d.batch] == ["b"]
+    assert d.classes[ra.req_id] == 3
+    assert [r.session_id for r, _ in d.held] == ["a"]
+
+
+def test_pacing_overridden_under_kv_pressure():
+    sched, clock = setup({"a": 10.0}, occ=0.95)
+    ra = mk_req("a", gen=5)
+    budget = RoundBudget(token_budget=4096, free_kv_blocks=10**6)
+    d = sched.schedule([ra], budget, clock.now())
+    assert [r.session_id for r in d.batch] == ["a"]
+
+
+def test_u2_utility_kv_relief_vs_barge_exposure():
+    """Eq. 1-3: big-KV request wins when pool crowded; far-ahead request
+    penalized."""
+    sched, clock = setup({"big": 2.5, "small": 1.5}, occ=0.8)
+    big = mk_req("big", gen=50)
+    small = mk_req("small", gen=2)
+    sched._kv_of = lambda r: 100.0 if r.session_id == "big" else 1.0
+    budget = RoundBudget(token_budget=4096, free_kv_blocks=10**6)
+    d = sched.schedule([small, big], budget, clock.now())
+    assert [r.session_id for r in d.batch] == ["big", "small"]
+    assert d.utilities[big.req_id] > d.utilities[small.req_id]
+
+
+def test_missing_telemetry_fails_closed_to_u1():
+    """Fail-closed (§6): unknown session -> first-audio path, not dropped."""
+    sched, clock = setup({})
+    r = mk_req("ghost", gen=5)
+    budget = RoundBudget(token_budget=4096, free_kv_blocks=10**6)
+    d = sched.schedule([r], budget, clock.now())
+    assert d.batch == [r]
+    assert d.classes[r.req_id] == 1
+
+
+def test_budget_admission_stops_at_first_misfit():
+    sched, clock = setup({})
+    r1 = mk_req("a", arrival=0.0, prompt=600)
+    r2 = mk_req("b", arrival=1.0, prompt=10)
+    budget = RoundBudget(token_budget=520, free_kv_blocks=10**6)
+    d = sched.schedule([r1, r2], budget, clock.now())
+    # r1 admits a 512 chunk; r2's 10 tokens exceed the remaining 8 -> stop
+    assert [r.session_id for r in d.batch] == ["a"]
+
+
+def test_fcfs_baseline_ignores_urgency():
+    mon = RuntimeMonitor(FakeClock(100.0))
+    sched = FCFSScheduler(mon, stage="talker")
+    r1 = mk_req("a", arrival=2.0, gen=5)
+    r2 = mk_req("b", arrival=1.0, prompt=64)
+    budget = RoundBudget(token_budget=4096, free_kv_blocks=10**6)
+    d = sched.schedule([r1, r2], budget, FakeClock(100.0).now())
+    assert [r.session_id for r in d.batch] == ["b", "a"]
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=200, deadline=None)
+@given(
+    bufs=st.lists(
+        st.one_of(st.none(), st.floats(0.0, 20.0)),
+        min_size=1, max_size=12),
+    token_budget=st.integers(1, 4096),
+    occ=st.floats(0.0, 1.0),
+)
+def test_schedule_invariants(bufs, token_budget, occ):
+    buffers = {f"s{i}": b for i, b in enumerate(bufs)}
+    sched, clock = setup(buffers, occ=occ)
+    reqs = [mk_req(f"s{i}", arrival=float(i), gen=1 if b is not None else 0,
+                   prompt=0 if b is not None else 64)
+            for i, b in enumerate(bufs)]
+    budget = RoundBudget(token_budget=token_budget, free_kv_blocks=10**6)
+    d = sched.schedule(list(reqs), budget, clock.now())
+    # 1. no duplicates, batch subset of ready
+    ids = [r.req_id for r in d.batch]
+    assert len(set(ids)) == len(ids)
+    assert set(ids) <= {r.req_id for r in reqs}
+    # 2. admitted chunks respect the token budget
+    assert sum(d.chunks.values()) <= token_budget
+    # 3. class ordering is monotone in the batch (0 <= 1 <= 2)
+    cls_seq = [d.classes[r.req_id] for r in d.batch]
+    assert cls_seq == sorted(cls_seq)
+    # 4. held requests never admitted
+    assert not ({r.req_id for r, _ in d.held} & set(ids))
+    # 5. U0 appear sorted by buffer ascending
+    u0 = [r for r in d.batch if d.classes[r.req_id] == 0]
+    u0_bufs = [sched._buffer(r) for r in u0]
+    assert u0_bufs == sorted(u0_bufs)
