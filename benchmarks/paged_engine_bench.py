@@ -1,0 +1,80 @@
+"""Real-data-plane microbenchmarks: paged vs dense decode-step latency
+and DRAM->HBM reload time per page.
+
+Section ``paged_engine`` of benchmarks/run.py. These are wall-clock
+numbers for the CPU container (Pallas interpret mode) — a perf
+trajectory for future PRs on the paged engine, not absolutes; on TPU the
+paged step runs the Mosaic kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+
+
+def _mean_step_us(eng, steps: int):
+    t0 = time.perf_counter()
+    n = 0
+    for _ in range(steps):
+        if not eng.step():
+            break
+        n += 1
+    return (time.perf_counter() - t0) / max(1, n) * 1e6, n
+
+
+def run(quick: bool = False) -> None:
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    from repro.serving.engine import RealtimeLLMEngine
+    from repro.serving.paged_engine import PagedRealtimeEngine
+
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                  vocab=512)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    slots = 4
+    steps = 8 if quick else 32
+
+    def admit(eng):
+        for i in range(slots):
+            eng.add_session(f"s{i}",
+                            rng.integers(0, cfg.vocab_size, size=16),
+                            max_new_tokens=steps + 16)
+
+    dense = RealtimeLLMEngine(cfg, params, slots=slots, capacity=256)
+    admit(dense)
+    dense.step()
+    dense.step()                               # warm the jit cache
+    us, n = _mean_step_us(dense, steps)
+    row("paged_engine/dense_step", us, f"slots={slots};rounds={n}")
+
+    paged = PagedRealtimeEngine(cfg, params, slots=slots, page_size=16,
+                                pages_per_seq=16)
+    admit(paged)
+    paged.step()
+    paged.step()
+    us, n = _mean_step_us(paged, steps)
+    row("paged_engine/paged_step", us, f"slots={slots};rounds={n}")
+
+    # DRAM->HBM reload path: finish the turns (unpin), offload suffix
+    # pages via the manager, then time the physical reload per page (the
+    # engine's hook records the host->device wall time)
+    paged.run_to_completion()
+    want = 4 if quick else 8
+    freed = paged.kv.evict(want, paged.clock.now())
+    paged.reload_wall_s.clear()
+    reloaded = 0
+    for sid in list(paged.kv.sessions):
+        n = paged.kv.missing_blocks(sid)
+        if n > 0:
+            paged.kv.reload(sid, paged.clock.now(), background=False)
+            reloaded += n
+    us_page = sum(paged.reload_wall_s) / max(1, reloaded) * 1e6
+    page_kb = np.prod(paged.k_pages.shape[2:]) * 2 \
+        * paged.k_pages.dtype.itemsize * cfg.num_layers / 1024.0
+    row("paged_engine/reload_per_page", us_page,
+        f"pages={reloaded};evicted={freed};page_kb={page_kb:.1f}")

@@ -16,7 +16,8 @@ def main() -> None:
                     help="comma-separated benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import eviction_index, kernel_bench, roofline_report
+    from benchmarks import eviction_index, kernel_bench, \
+        paged_engine_bench, roofline_report
     from benchmarks import serving_suite as S
 
     benches = {
@@ -32,6 +33,7 @@ def main() -> None:
         "kv_residency": S.kv_residency,              # Fig. 17
         "continuity_timeline": S.continuity_timeline,  # Fig. 18
         "eviction_index": eviction_index.run,        # Table 1
+        "paged_engine": paged_engine_bench.run,      # real data plane
         "kernels": kernel_bench.run,
         "roofline": roofline_report.run,             # §Roofline
     }

@@ -6,6 +6,11 @@ urgency scheduling + interaction-aware KV management), compared with the
 vLLM-Omni-style baselines — the laptop-scale version of the paper's §7.
 
 Run:  PYTHONPATH=src python examples/serve_realtime.py [--sessions 32]
+
+``--engine real`` instead drives a multi-turn barge-in conversation
+through the PagedRealtimeEngine: a qwen2-1.5b-class reduced config on
+actual paged JAX KV state, with physical evict-to-DRAM, speech-time
+preload reload, and zero re-prefill on reloaded turns (DESIGN.md §3).
 """
 import argparse
 
@@ -22,12 +27,21 @@ SYSTEMS = {
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="sim", choices=["sim", "real"])
     ap.add_argument("--sessions", type=int, default=32)
     ap.add_argument("--concurrency", type=int, default=12)
     ap.add_argument("--barge-in", type=float, default=0.5)
     ap.add_argument("--workload", default="interactive",
                     choices=["sharegpt", "interactive", "mixed"])
     args = ap.parse_args()
+
+    if args.engine == "real":
+        from repro.serving.paged_engine import run_multiturn_demo
+        run_multiturn_demo()
+        print("\n(real paged data plane: reloaded turns pay zero "
+              "re-prefill tokens; the preload hit hides the reload "
+              "under user speech.)")
+        return
 
     pipe = qwen3_omni_like(kv_capacity_gb=2.0)
     wl = WorkloadConfig(kind=args.workload, num_sessions=args.sessions,

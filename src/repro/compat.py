@@ -1,0 +1,23 @@
+"""jax version compatibility.
+
+The deployment containers pin different jax versions; newer jax promoted
+some experimental APIs to the top-level namespace with renamed kwargs.
+These shims pick whichever spelling the installed jax provides — runtime
+behavior is identical.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """jax.shard_map (jax >= 0.5, ``check_vma``) or
+    jax.experimental.shard_map.shard_map (0.4.x, ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -109,11 +109,37 @@ class KVManager:
         self._tiebreak = itertools.count()
         # working blocks owned by live requests (decode growth etc.)
         self.working_blocks = 0
+        # data-plane hooks: a physical engine (PagedRealtimeEngine)
+        # registers these so accounting decisions move real pages
+        self._on_evict_pages = None
+        self._on_reload_pages = None
         # telemetry
         self.evicted_blocks = 0
         self.reloaded_blocks = 0
         self.eviction_overhead_s: List[float] = []
         self.residency_log: List[Tuple[float, int]] = []
+
+    # ------------------------------------------------------------- hooks
+    def set_page_hooks(self, *, on_evict=None, on_reload=None) -> None:
+        """Register the narrow data-plane hooks (DESIGN.md §3): this
+        manager stays pure accounting, but a paged engine can make every
+        eviction/reload decision move physical pages.
+
+        on_evict(sid, blocks): called after a session's HBM range shrank
+        by `blocks` — the engine offloads that many suffix pages to its
+        DRAM tier. on_reload(sid, blocks): called after a reload was
+        admitted — the engine brings the offloaded pages back. Both fire
+        synchronously; the TransferChannel still models the wall-clock
+        cost the simulator/metrics charge for the movement.
+        """
+        self._on_evict_pages = on_evict
+        self._on_reload_pages = on_reload
+
+    @property
+    def physical_pages(self) -> bool:
+        """True when a data plane moves real pages on our decisions."""
+        return (self._on_evict_pages is not None
+                or self._on_reload_pages is not None)
 
     # ------------------------------------------------------------- state
     def session(self, sid: str) -> SessionKV:
@@ -135,6 +161,18 @@ class KVManager:
     def occupancy(self) -> float:
         """R_{s,occ} of Eq. 3."""
         return min(1.0, self.used_blocks / max(1, self.capacity))
+
+    def reclaimable_blocks(self, now: float) -> int:
+        """Idle HBM blocks the eviction policy could free right now.
+        Admission control counts these as available — allocation evicts
+        on demand (§5.1), so a full pool with idle sessions must not
+        starve live decode."""
+        total = 0
+        for sid, kv in self.sessions.items():
+            if self.monitor is not None and self.monitor.immediate_reuse(sid):
+                continue
+            total += kv.evictable(now)
+        return total
 
     def blocks_of(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
@@ -171,6 +209,8 @@ class KVManager:
         for sid, kv in self.sessions.items():
             if kv.evictable(now) <= 0:
                 continue
+            if self.monitor is not None and self.monitor.immediate_reuse(sid):
+                continue          # speaking/barge-in sessions are protected
             if self.policy == "next_use":
                 key = self.next_use_estimate(sid, now)
             else:                            # lru: oldest access first
@@ -235,6 +275,8 @@ class KVManager:
         if kv.evictable(now) > 0 and self.policy == "next_use" \
                 and self.index_mode == "heap":
             self._push_index(sid, now)      # partial eviction: re-rank rest
+        if self._on_evict_pages is not None and self.policy != "none":
+            self._on_evict_pages(sid, take)
         return take
 
     # ------------------------------------------------------------- alloc
@@ -249,6 +291,12 @@ class KVManager:
 
     def release_working(self, blocks: int) -> None:
         self.working_blocks = max(0, self.working_blocks - blocks)
+
+    def release_session(self, sid: str) -> None:
+        """Session ended (user hung up): drop its KV accounting — the
+        data plane frees the physical pages."""
+        self.sessions.pop(sid, None)
+        self._version.pop(sid, None)
 
     def pin(self, sid: str) -> None:
         self.session(sid).pinned = True
@@ -288,7 +336,12 @@ class KVManager:
         if n <= 0 or self.policy == "none":
             return None
         if self.free_blocks < n:
+            # pin across the eviction pass: the session being brought
+            # back must never be selected as its own victim
+            was_pinned = kv.pinned
+            kv.pinned = True
             self.evict(n - self.free_blocks, now)
+            kv.pinned = was_pinned
         if self.free_blocks < n:
             return None
         t = self.channel.submit(sid, n, now, background)
@@ -296,6 +349,8 @@ class KVManager:
         # concurrent admissions see the pressure
         kv.hbm_blocks += n
         self.reloaded_blocks += n
+        if self._on_reload_pages is not None:
+            self._on_reload_pages(sid, n)
         return t
 
     def protect(self, sid: str, now: float) -> None:

@@ -68,6 +68,9 @@ class SessionView:
     reply_gap_ema: Optional[float] = None   # user think-time estimate (s)
     last_playback_end: Optional[float] = None
     expected_speech_end: Optional[float] = None
+    # physical KV placement (reported by the paged engine's data plane)
+    resident_pages: int = 0
+    offloaded_pages: int = 0
 
 
 class RuntimeMonitor:
@@ -130,6 +133,16 @@ class RuntimeMonitor:
         v.playback.complete = True
         v.last_playback_end = self.clock.now()
 
+    def on_page_movement(self, session_id: str, *, resident: int,
+                         offloaded: int) -> None:
+        """Data-plane report: where a session's KV pages physically live
+        (HBM-resident vs DRAM-offloaded). Fed by the paged engine after
+        every prefill/evict/reload/trim so dashboards and policies can
+        read real placement instead of accounting estimates."""
+        v = self.register(session_id)
+        v.resident_pages = resident
+        v.offloaded_pages = offloaded
+
     # ----------------------------------------------------------- queries
     def view(self, session_id: str) -> Optional[SessionView]:
         return self.sessions.get(session_id)
@@ -158,3 +171,10 @@ class RuntimeMonitor:
     def immediate_reuse(self, session_id: str) -> bool:
         v = self.sessions.get(session_id)
         return bool(v and (v.speaking or v.barge_in))
+
+    def page_counts(self, session_id: str):
+        """(resident, offloaded) physical page counts, (0, 0) unknown."""
+        v = self.sessions.get(session_id)
+        if v is None:
+            return 0, 0
+        return v.resident_pages, v.offloaded_pages

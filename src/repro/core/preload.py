@@ -92,6 +92,11 @@ class Preloader:
         p = self.pending.pop(sid, None)
         if p is None:
             return
+        if self.kv.physical_pages:
+            # a physical data plane reloads pages at admission time —
+            # the bytes already moved, so there is nothing to revert;
+            # dropping the pending entry just forfeits the 'hit' credit
+            return
         p.transfer.cancelled = True
         kv = self.kv.session(sid)
         kv.hbm_blocks = max(0, kv.hbm_blocks - p.transfer.blocks)
@@ -118,3 +123,10 @@ class Preloader:
             return 0.0                # 'none' policy: engine re-prefills
         self.stats.sync_fallbacks += 1
         return transfer.done - now
+
+
+# Paper naming (§5.2): the speech-triggered preloader. When the KVManager
+# carries page hooks (PagedRealtimeEngine), an admitted preload physically
+# reloads pages at trigger time; ``cancel`` then only forfeits the pending
+# hit (it cannot un-move pages, and doesn't pretend to).
+SpeechPreloader = Preloader

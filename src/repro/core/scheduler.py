@@ -40,17 +40,25 @@ class RoundBudget:
     max_batch: int = 256
     block_size: int = 16
 
+    def need_blocks(self, req: Request, chunk: int) -> int:
+        """KV blocks this round actually allocates: prefill chunks round
+        up; a decode token needs a new block only when its position
+        crosses a block boundary — charging one per token would let a
+        full pool of live sessions starve decode that needs no growth."""
+        if req.phase == Phase.DECODE:
+            return 1 if req.total_context % self.block_size == 0 else 0
+        return -(-chunk // self.block_size)
+
     def fits(self, req: Request, chunk: int) -> bool:
         if self.max_batch <= 0:
             return False
         if chunk > self.token_budget:
             return False
-        need_blocks = -(-chunk // self.block_size)
-        return need_blocks <= self.free_kv_blocks
+        return self.need_blocks(req, chunk) <= self.free_kv_blocks
 
     def admit(self, req: Request, chunk: int) -> None:
         self.token_budget -= chunk
-        self.free_kv_blocks -= -(-chunk // self.block_size)
+        self.free_kv_blocks -= self.need_blocks(req, chunk)
         self.max_batch -= 1
 
 

@@ -70,6 +70,22 @@ class PagedPool:
         s.length = max(s.length, new_length)
         return out
 
+    def trim(self, seq_id: str, length: int) -> int:
+        """Shrink a sequence's page list to what `length` tokens need,
+        freeing trailing pages (in-flight lookahead pages on barge-in,
+        §5.2 — committed pages are untouched). Returns pages freed."""
+        s = self.seq(seq_id)
+        keep = self.pages_for(length)
+        freed = 0
+        while len(s.pages) > keep:
+            phys = s.pages.pop()
+            s.offloaded.pop(len(s.pages), None)
+            if phys >= 0:
+                self.free.append(phys)
+                freed += 1
+        s.length = min(s.length, length)
+        return freed
+
     def release(self, seq_id: str) -> None:
         s = self.seqs.pop(seq_id, None)
         if s is None:
@@ -113,18 +129,24 @@ class PagedPool:
 
     def reload(self, seq_id: str, kv_pages):
         """Bring offloaded pages back. Returns (updated kv_pages, loaded
-        page count). kv_pages is a jax array; updates are functional."""
+        page count). kv_pages is a jax array (or adapter); the update is
+        functional and batched — one scatter for all pages, not one full
+        array copy per page (this sits on the sync-fallback critical
+        path). All-or-nothing: raises before moving anything if the pool
+        cannot hold every offloaded page."""
         s = self.seq(seq_id)
-        loaded = 0
-        for li in sorted(s.offloaded):
-            if not self.free:
-                raise OutOfPages(f"pool exhausted reloading {seq_id}")
-            phys = self.free.pop()
-            kv_pages = kv_pages.at[phys].set(s.offloaded[li])
-            s.pages[li] = phys
-            loaded += 1
+        logical = sorted(s.offloaded)
+        if not logical:
+            return kv_pages, 0
+        if len(self.free) < len(logical):
+            raise OutOfPages(f"pool exhausted reloading {seq_id}")
+        phys = [self.free.pop() for _ in logical]
+        kv_pages = kv_pages.at[np.asarray(phys)].set(
+            np.stack([s.offloaded[li] for li in logical]))
+        for li, p in zip(logical, phys):
+            s.pages[li] = p
         s.offloaded.clear()
-        return kv_pages, loaded
+        return kv_pages, len(logical)
 
     def resident_pages(self, seq_id: str) -> int:
         return sum(1 for p in self.seq(seq_id).pages if p >= 0)

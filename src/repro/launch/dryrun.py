@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, list_configs
 from repro.distributed.sharding import ShardingRules
 from repro.launch import specs as SP
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.models import model as M
 from repro.training import optimizer as opt_mod
 from repro.training.train_loop import TrainConfig, build_train_step
@@ -236,7 +236,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
             moe_mod.set_expert_tp(True)
         step, args, in_sh, donate, out_sh = build_step(
             cfg, cell, mesh, rules, microbatches=microbatches)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             # 1) production program: layer scans (O(1) HLO, fast compile);
             #    memory_analysis of THIS artifact proves the cell fits.
             jfn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,

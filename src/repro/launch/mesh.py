@@ -23,3 +23,12 @@ def make_debug_mesh(data: int = 2, model: int = 2):
 def data_axes(mesh) -> tuple:
     """Every non-'model' axis is a data/batch axis ('pod' included)."""
     return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where available (jax >= 0.5); on jax 0.4.x
+    the Mesh's own context manager provides the global-mesh semantics."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

@@ -1,8 +1,18 @@
 """Serving launcher — runs the realtime interaction pipeline.
 
+Simulated pipeline (paper-scale policies on the virtual clock):
+
   PYTHONPATH=src python -m repro.launch.serve --model qwen3-omni-like \
       --workload interactive --concurrency 12 --barge-in 0.5 \
       --system liveserve
+
+Real engine (paged data plane on actual JAX state, CPU-runnable):
+
+  PYTHONPATH=src python -m repro.launch.serve --engine real
+
+runs a multi-turn barge-in conversation through PagedRealtimeEngine —
+physical evict/offload/preload-reload — and reports per-turn TTFT,
+reload stall, and re-prefill tokens (zero on reloaded turns).
 """
 from __future__ import annotations
 
@@ -12,6 +22,9 @@ import json
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="sim", choices=["sim", "real"],
+                    help="sim: event-driven simulator; real: paged JAX "
+                         "data plane (DESIGN.md §3)")
     ap.add_argument("--model", default="qwen3-omni-like",
                     choices=["qwen3-omni-like", "ming-omni-like"])
     ap.add_argument("--workload", default="interactive",
@@ -25,6 +38,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+
+    if args.engine == "real":
+        from repro.serving.paged_engine import run_multiturn_demo
+        out = run_multiturn_demo(
+            seed=args.seed,
+            log=(lambda *_a, **_k: None) if args.json else print)
+        if args.json:
+            print(json.dumps(out, indent=1, default=str))
+        return
 
     from repro.serving.costmodel import PIPELINES
     from repro.serving.simulator import run_sim

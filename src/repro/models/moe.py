@@ -199,7 +199,8 @@ def moe_ep(params, x, cfg, mesh, *, data_axes=("data",), model_axis="model"):
         return y[:t].reshape(b_loc, s, d), aux
 
     out_spec = P(None, None, None) if expert_tp else P(DPS, None, None)
-    y, aux = jax.shard_map(
+    from repro.compat import shard_map
+    y, aux = shard_map(
         body, mesh=mesh, in_specs=in_specs,
         out_specs=(out_spec, P()), check_vma=False)(core, x)
     if m.num_shared_experts:

@@ -33,6 +33,24 @@ class SlotState:
     request: Request
     pending_token: int              # next token to feed
     tokens: List[int] = field(default_factory=list)
+    working_blocks: int = 0         # KV blocks actually acquired
+
+
+def schedule_round(scheduler, kv, clock, slot_state, act, token_budget, *,
+                   block_size: int = 16):
+    """One admission round, shared by both engines: free KV plus
+    reclaimable idle KV (eviction frees it on demand) against the token
+    budget. Returns the scheduled slot ids."""
+    budget = RoundBudget(
+        token_budget=token_budget,
+        free_kv_blocks=kv.free_blocks
+        + kv.reclaimable_blocks(clock.now()),
+        block_size=block_size)
+    decision = scheduler.schedule([s.request for s in act], budget,
+                                  clock.now())
+    sched_ids = {r.req_id for r in decision.batch}
+    return [i for i, s in slot_state.items()
+            if s and s.request.req_id in sched_ids]
 
 
 class RealtimeLLMEngine:
@@ -86,10 +104,12 @@ class RealtimeLLMEngine:
         req.phase = Phase.DECODE
         req.prefilled = req.prompt_len
         self.kv.pin(session_id)
-        self.kv.try_allocate_working(
-            self.kv.blocks_of(req.prompt_len), self.clock.now())
+        blocks = self.kv.blocks_of(req.prompt_len)
+        got = blocks if self.kv.try_allocate_working(
+            blocks, self.clock.now()) else 0
         tok = int(jnp.argmax(logits[0]))
-        self.slot_state[slot] = SlotState(session_id, req, tok, [tok])
+        self.slot_state[slot] = SlotState(session_id, req, tok, [tok],
+                                          working_blocks=got)
         return slot
 
     def abort(self, session_id: str) -> None:
@@ -97,10 +117,17 @@ class RealtimeLLMEngine:
         for i, s in self.slot_state.items():
             if s and s.session_id == session_id:
                 s.request.state = RequestState.ABORTED
-                self.kv.commit_turn(session_id,
-                                    s.request.total_context,
-                                    self.clock.now())
+                self._commit(s)
                 self.slot_state[i] = None
+
+    def _commit(self, s: SlotState) -> None:
+        """Turn over: the working allocation becomes committed session
+        KV (releasing both would double-count the same blocks). Only
+        blocks actually acquired are released — an allocation that
+        failed at admission must not drain other sessions' share."""
+        self.kv.release_working(s.working_blocks)
+        self.kv.commit_turn(s.session_id, s.request.total_context,
+                            self.clock.now())
 
     # ------------------------------------------------------------ rounds
     def active(self) -> List[SlotState]:
@@ -115,14 +142,8 @@ class RealtimeLLMEngine:
         act = self.active()
         if not act:
             return []
-        budget = RoundBudget(token_budget=self.slots,
-                             free_kv_blocks=self.kv.free_blocks
-                             + self.kv.capacity)
-        decision = self.scheduler.schedule(
-            [s.request for s in act], budget, self.clock.now())
-        sched_ids = {r.req_id for r in decision.batch}
-        sched_slots = [i for i, s in self.slot_state.items()
-                       if s and s.request.req_id in sched_ids]
+        sched_slots = schedule_round(self.scheduler, self.kv, self.clock,
+                                     self.slot_state, act, self.slots)
         if not sched_slots:
             return []
         tokens = jnp.asarray(
@@ -150,8 +171,7 @@ class RealtimeLLMEngine:
                 s.tokens.append(tok)
             else:
                 s.request.state = RequestState.FINISHED
-                self.kv.commit_turn(s.session_id, s.request.total_context,
-                                    self.clock.now())
+                self._commit(s)
         return sched_slots
 
     def run_to_completion(self, max_rounds: int = 10_000) -> Dict[str, list]:

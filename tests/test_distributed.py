@@ -87,7 +87,8 @@ def test_small_mesh_train_step_lowers_and_runs():
         B, S = 8, 32
         batch = {"tokens": jnp.ones((B, S), jnp.int32),
                  "labels": jnp.ones((B, S), jnp.int32)}
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import mesh_context
+        with mesh_context(mesh):
             p_sh = rules.params(jax.eval_shape(lambda: params))
             o_sh = rules.opt_state(jax.eval_shape(lambda: state))
             b_sh = rules.batch(jax.eval_shape(lambda: batch))
@@ -121,7 +122,8 @@ def test_moe_ep_shard_map_matches_local():
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model))
         y_local, aux_local = moe_mod.moe_local(p, x, cfg)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import mesh_context
+        with mesh_context(mesh):
             y_ep, aux_ep = moe_mod.moe_ep(p, x, cfg, mesh)
         np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_ep),
                                    rtol=2e-4, atol=2e-4)

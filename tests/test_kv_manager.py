@@ -1,7 +1,6 @@
 """Unit + property tests for the KV manager (paper §5) and preloader."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.core.kv_manager import KVManager
 from repro.core.monitor import RuntimeMonitor

@@ -1,7 +1,6 @@
 """Property tests: playback timeline invariants + workload generators."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.core.monitor import PlaybackState, RuntimeMonitor
 from repro.serving.workload import WorkloadConfig, generate

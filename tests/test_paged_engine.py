@@ -1,0 +1,309 @@
+"""Paged realtime engine: the LiveServe KV policies on real JAX state.
+
+Covers the tentpole contracts:
+- token-for-token parity with the dense RealtimeLLMEngine, under both
+  the default and an adversarial scheduler (scheduling moves WHEN, never
+  WHICH — paper §5.2);
+- multi-turn decode matches a single dense-cache reference (no
+  re-prefill of committed context);
+- evict-to-DRAM -> clobber -> reload -> decode continues bit-exact
+  across a turn boundary;
+- barge-in mid-decode keeps committed pages and frees in-flight ones;
+- pool/accounting invariants hold throughout.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.scheduler import SchedulerConfig, UrgencyScheduler
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serving.engine import RealtimeLLMEngine
+from repro.serving.paged_engine import PagedRealtimeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                  vocab=331)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _decode_feed(cfg, params, cache, token):
+    lg, cache = decode_step(cfg, params,
+                            jnp.asarray([token], jnp.int32), cache)
+    return int(jnp.argmax(lg[0])), cache
+
+
+def _reference_turns(cfg, params, turns):
+    """Dense single-sequence reference over a multi-turn conversation.
+    turns: [(prompt, n_tokens), ...]. Returns per-turn token lists."""
+    cache = init_cache(cfg, 1, 256)
+    out = []
+    last = None
+    for t, (prompt, n) in enumerate(turns):
+        if t == 0:
+            logits, cache = prefill(cfg, params,
+                                    jnp.asarray(prompt)[None, :], cache)
+            nxt = int(jnp.argmax(logits[0]))
+        else:
+            # the engine writes the last produced token's KV when it is
+            # fed on the final round of the previous turn
+            nxt, cache = _decode_feed(cfg, params, cache, last)
+            for tok in prompt:
+                nxt, cache = _decode_feed(cfg, params, cache, int(tok))
+        toks = [nxt]
+        for _ in range(n - 1):
+            nxt, cache = _decode_feed(cfg, params, cache, toks[-1])
+            toks.append(nxt)
+        last = toks[-1]
+        out.append(toks)
+    return out
+
+
+# ----------------------------------------------------------- parity (a)
+def test_parity_with_dense_engine(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(0)
+    prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=ln)
+               for i, ln in enumerate((7, 11, 5))}
+    dense = RealtimeLLMEngine(cfg, params, slots=4, capacity=128)
+    paged = PagedRealtimeEngine(cfg, params, slots=4, page_size=8,
+                                pages_per_seq=16)
+    for sid, p in prompts.items():
+        dense.add_session(sid, p, max_new_tokens=10)
+        paged.add_session(sid, p, max_new_tokens=10)
+    want = dense.run_to_completion()
+    got = paged.run_to_completion()
+    paged.check_invariants()
+    for sid in prompts:
+        assert got[sid] == want[sid], sid
+
+
+def test_adversarial_schedule_changes_timing_not_tokens(tiny):
+    """A rotating single-admission scheduler: paged rows held out of the
+    batch are padded to the scratch page; tokens must not change."""
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    prompts = {f"s{i}": rng.integers(0, cfg.vocab_size, size=6)
+               for i in range(3)}
+
+    class EveryOther(UrgencyScheduler):
+        def __init__(self, monitor):
+            super().__init__(SchedulerConfig(), monitor, stage="t")
+            self.i = 0
+
+        def schedule(self, ready, budget, now):
+            self.i += 1
+            d = super().schedule(ready, budget, now)
+            keep = [d.batch[self.i % max(1, len(d.batch))]] \
+                if d.batch else []
+            d.batch = keep
+            d.chunks = {r.req_id: 1 for r in keep}
+            return d
+
+    dense = RealtimeLLMEngine(cfg, params, slots=4, capacity=128)
+    for sid, p in prompts.items():
+        dense.add_session(sid, p, max_new_tokens=8)
+    want = dense.run_to_completion()
+
+    paged = PagedRealtimeEngine(cfg, params, slots=4, page_size=8,
+                                pages_per_seq=16)
+    paged.scheduler = EveryOther(paged.monitor)
+    for sid, p in prompts.items():
+        paged.add_session(sid, p, max_new_tokens=8)
+    got = paged.run_to_completion(max_rounds=400)
+    paged.check_invariants()
+    for sid in prompts:
+        assert got[sid] == want[sid], sid
+
+
+# ------------------------------------------------------ multi-turn (b)
+def test_multiturn_matches_dense_reference(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(2)
+    turns = [(rng.integers(0, cfg.vocab_size, size=9), 6),
+             (rng.integers(0, cfg.vocab_size, size=5), 7),
+             (rng.integers(0, cfg.vocab_size, size=4), 5)]
+    want = _reference_turns(cfg, params, turns)
+
+    eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                              pages_per_seq=16)
+    eng.add_session("a", turns[0][0], max_new_tokens=turns[0][1])
+    eng.run_to_completion()
+    for prompt, n in turns[1:]:
+        eng.start_turn("a", prompt, max_new_tokens=n)
+        eng.run_to_completion()
+    eng.check_invariants()
+    assert eng.sessions["a"].history == want
+    # committed context is never re-prefilled
+    for st in eng.sessions["a"].turn_stats:
+        assert st["re_prefill_tokens"] == 0
+
+
+def test_evict_reload_bit_exact_across_turn(tiny):
+    """Offload to DRAM, clobber the freed HBM pages with another
+    session, reload, decode the next turn: page contents round-trip
+    bit-exactly and the token stream matches a never-evicted control."""
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    p1 = rng.integers(0, cfg.vocab_size, size=10)
+    p2 = rng.integers(0, cfg.vocab_size, size=6)
+    pb = rng.integers(0, cfg.vocab_size, size=8)
+
+    def drive(eng, evict):
+        eng.add_session("a", p1, max_new_tokens=6)
+        eng.run_to_completion()
+        snapshot = None
+        if evict:
+            now = eng.clock.now()
+            assert eng.kv.evict(2, now) == 2      # physical via hook
+            seq = eng.pool.seq("a")
+            assert len(seq.offloaded) == 2
+            snapshot = {li: np.array(c) for li, c in seq.offloaded.items()}
+            # clobber the freed pages with a second session
+            eng.add_session("b", pb, max_new_tokens=2)
+            eng.run_to_completion()
+        eng.start_turn("a", p2, max_new_tokens=6)
+        eng.run_to_completion()
+        eng.check_invariants()
+        return eng, snapshot
+
+    control, _ = drive(PagedRealtimeEngine(
+        cfg, params, slots=2, page_size=4, pages_per_seq=16,
+        num_pages=64), evict=False)
+    victim, snapshot = drive(PagedRealtimeEngine(
+        cfg, params, slots=2, page_size=4, pages_per_seq=16,
+        num_pages=12), evict=True)
+
+    # turn-2 tokens identical although the victim's pages went to DRAM
+    # and back through different physical page ids
+    assert victim.sessions["a"].history == control.sessions["a"].history
+    # reloaded device pages hold bit-identical contents
+    seq = victim.pool.seq("a")
+    assert not seq.offloaded
+    for li, host in snapshot.items():
+        phys = seq.pages[li]
+        np.testing.assert_array_equal(
+            np.asarray(victim.k_pages[:, phys]), host[0])
+        np.testing.assert_array_equal(
+            np.asarray(victim.v_pages[:, phys]), host[1])
+    # the reloaded turn paid a reload stall but zero re-prefill
+    st = victim.sessions["a"].turn_stats[-1]
+    assert st["re_prefill_tokens"] == 0
+    assert st["reload_stall_s"] > 0.0          # sync fallback path
+    assert victim.kv.reloaded_blocks == 2
+
+
+def test_speech_preload_reloads_before_turn(tiny):
+    """Speech-triggered preload physically reloads pages during the
+    utterance; the next turn starts warm (stall 0, hit counted)."""
+    cfg, params = tiny
+    rng = np.random.default_rng(4)
+    eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                              pages_per_seq=16, num_pages=32)
+    eng.add_session("a", rng.integers(0, cfg.vocab_size, size=10),
+                    max_new_tokens=6)
+    eng.run_to_completion()
+    assert eng.kv.evict(2, eng.clock.now()) == 2
+    assert len(eng.pool.seq("a").offloaded) == 2
+    eng.user_speech_start("a", expected_dur_s=2.0)
+    assert not eng.pool.seq("a").offloaded     # reloaded at trigger time
+    eng.clock.tick(2.0)                        # utterance completes
+    eng.start_turn("a", rng.integers(0, cfg.vocab_size, size=4),
+                   max_new_tokens=4)
+    eng.run_to_completion()
+    eng.check_invariants()
+    st = eng.sessions["a"].turn_stats[-1]
+    assert st["reload_stall_s"] == 0.0
+    assert st["re_prefill_tokens"] == 0
+    assert eng.preloader.stats.admitted == 1
+    assert eng.preloader.stats.hits == 1
+
+
+# -------------------------------------------------------- barge-in (c)
+def test_barge_in_keeps_committed_frees_inflight(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(5)
+    eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                              pages_per_seq=16, num_pages=32)
+    p = rng.integers(0, cfg.vocab_size, size=5)
+    eng.add_session("a", p, max_new_tokens=20)
+    for _ in range(3):
+        eng.step()
+    sess = eng.sessions["a"]
+    assert sess.kv_len == 8                    # 5 prompt + 3 decoded
+    # decode lookahead owns pages beyond the committed 2 (in-flight)
+    inflight = len(eng.pool.seq("a").pages) - eng.pool.pages_for(8)
+    assert inflight > 0
+    free_before = eng.pool.free_pages
+    eng.barge_in("a")
+    # in-flight pages returned; committed pages kept resident
+    assert eng.pool.free_pages == free_before + inflight
+    assert eng.pool.resident_pages("a") == eng.pool.pages_for(8) == 2
+    assert eng.kv.session("a").total_blocks == 2
+    assert not eng.kv.session("a").pinned
+    assert eng.free_slot() is not None
+    eng.check_invariants()
+    # the next turn continues from the committed pages bit-exactly
+    p2 = rng.integers(0, cfg.vocab_size, size=4)
+    eng.start_turn("a", p2, max_new_tokens=4)
+    eng.run_to_completion()
+    eng.check_invariants()
+    # dense reference: the aborted turn's last produced token (t3) was
+    # pending at barge-in, so its KV is never written — turn 2 feeds the
+    # new prompt right after t2's KV
+    cache = init_cache(cfg, 1, 256)
+    logits, cache = prefill(cfg, params, jnp.asarray(p)[None, :], cache)
+    toks1 = [int(jnp.argmax(logits[0]))]
+    for _ in range(3):
+        nxt, cache = _decode_feed(cfg, params, cache, toks1[-1])
+        toks1.append(nxt)
+    nxt = None
+    for tok in p2:
+        nxt, cache = _decode_feed(cfg, params, cache, int(tok))
+    toks2 = [nxt]
+    for _ in range(3):
+        nxt, cache = _decode_feed(cfg, params, cache, toks2[-1])
+        toks2.append(nxt)
+    assert sess.history == [toks1, toks2]
+
+
+def test_speech_session_becomes_evictable_after_turn(tiny):
+    """The utterance ends when its turn reaches the LLM: a session that
+    once spoke must not stay immediate_reuse forever, or its idle KV
+    would be permanently unevictable and wedge a full pool."""
+    cfg, params = tiny
+    rng = np.random.default_rng(7)
+    eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                              pages_per_seq=16, num_pages=32)
+    eng.add_session("a", rng.integers(0, cfg.vocab_size, size=8),
+                    max_new_tokens=4)
+    eng.run_to_completion()
+    eng.user_speech_start("a", expected_dur_s=1.0)
+    eng.clock.tick(1.0)
+    eng.start_turn("a", rng.integers(0, cfg.vocab_size, size=4),
+                   max_new_tokens=4)
+    eng.run_to_completion()
+    eng.clock.tick(eng.kv.protect_ttl_s)   # preload protection lapses
+    now = eng.clock.now()
+    assert eng.kv.reclaimable_blocks(now) > 0
+    assert eng.kv.evict(1, now) == 1
+    eng.check_invariants()
+
+
+def test_end_session_returns_pages(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(6)
+    eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                              pages_per_seq=16, num_pages=32)
+    eng.add_session("a", rng.integers(0, cfg.vocab_size, size=9),
+                    max_new_tokens=5)
+    eng.run_to_completion()
+    assert eng.pool.free_pages < eng.num_pages
+    eng.end_session("a")
+    assert eng.pool.free_pages == eng.num_pages
+    assert eng.kv.used_blocks == 0
+    eng.check_invariants()

@@ -1,12 +1,11 @@
 """Paged pool tests: allocation/eviction/reload round-trips are bit-exact
 and the block tables drive the Pallas paged_attention kernel correctly
 end-to-end (pool -> tables -> kernel == dense oracle)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ref import paged_attention_ref

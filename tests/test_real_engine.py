@@ -79,6 +79,22 @@ def test_scheduling_changes_timing_not_tokens(tiny):
         assert out[sid] == _greedy_reference(cfg, params, p, 8), sid
 
 
+def test_turn_commit_releases_working_blocks(tiny):
+    """Working blocks become committed session KV on turn end — leaving
+    them allocated too would double-count and starve admission."""
+    cfg, params = tiny
+    rng = np.random.default_rng(7)
+    eng = RealtimeLLMEngine(cfg, params, slots=2, capacity=128)
+    eng.add_session("a", rng.integers(0, cfg.vocab_size, size=7), 5)
+    eng.run_to_completion()
+    assert eng.kv.working_blocks == 0
+    assert eng.kv.session("a").total_blocks == eng.kv.blocks_of(12)
+    eng.add_session("b", rng.integers(0, cfg.vocab_size, size=7), 50)
+    eng.step()
+    eng.abort("b")
+    assert eng.kv.working_blocks == 0
+
+
 def test_abort_frees_slot_for_new_session(tiny):
     cfg, params = tiny
     rng = np.random.default_rng(2)

@@ -1,6 +1,5 @@
 """Unit + property tests for the urgency scheduler (paper §4)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.core.monitor import RuntimeMonitor
 from repro.core.scheduler import (FCFSScheduler, RoundBudget,
