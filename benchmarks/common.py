@@ -41,7 +41,14 @@ def fmt(v, nd=3):
         return str(v)
 
 
+# every row() lands here so drivers can serialize a whole run
+# (benchmarks/run.py --json-out; the CI smoke artifact)
+ROWS: list = []
+
+
 def row(name: str, us_per_call, derived: str) -> str:
+    ROWS.append({"name": name, "us_per_call": us_per_call,
+                 "derived": derived})
     line = f"{name},{fmt(us_per_call, 1)},{derived}"
     print(line, flush=True)
     return line

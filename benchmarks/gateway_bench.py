@@ -1,0 +1,59 @@
+"""Realtime-gateway benchmark: liveserve vs fcfs on the real paged data
+plane under open-loop barge-in load (DESIGN.md §4).
+
+Section ``gateway`` of benchmarks/run.py. The same seeded workload is
+replayed through two gateways (same model, same engine geometry, one
+compiled step shared); rows report tail TTFP, continuity, token waste,
+and completed-turn throughput per policy, plus mean round wall time —
+the perf trajectory the smoke CI job accumulates. Wall-clock numbers
+for the CPU container (Pallas interpret mode); on TPU the step runs the
+Mosaic kernel.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import fmt, row
+
+
+def run(quick: bool = False) -> dict:
+    from repro.serving.gateway.harness import (build_gateway,
+                                               run_gateway_workload,
+                                               tiny_model)
+
+    sessions = 4 if quick else 8
+    max_response = 10 if quick else 16
+    apt = 0.6
+    model = tiny_model(0)
+    out = {}
+    for policy, cap in (("liveserve", 3.0), ("fcfs", None)):
+        gw = build_gateway(policy=policy, scale=4.0, model=model,
+                           frontier_cap_s=cap, round_token_budget=2,
+                           pages_per_seq=10, audio_per_token_s=apt)
+        t0 = time.perf_counter()
+        m, gw = run_gateway_workload(
+            policy=policy, sessions=sessions, barge_in=0.3, seed=0,
+            rate_rps=8.0, max_response=max_response, max_prompt=12,
+            gateway=gw, timeout_s=600)
+        wall = time.perf_counter() - t0
+        s = m.summary()
+        out[policy] = s
+        row(f"gateway/{policy}_p90_ttfp", s["p90_ttfp"] * 1e6,
+            f"turns={s['turns']};continuity={fmt(s['continuity'], 2)};"
+            f"waste={fmt(s['waste_ratio'], 3)};"
+            f"rps={fmt(s['completed_rps'], 3)}")
+        row(f"gateway/{policy}_round", wall / max(1, gw.rounds) * 1e6,
+            f"rounds={gw.rounds};sessions={sessions};"
+            f"over_frontier={fmt(gw.max_over_frontier_s, 3)}")
+    if out["liveserve"]["p90_ttfp"] < out["fcfs"]["p90_ttfp"]:
+        verdict = "liveserve_wins"
+    else:
+        verdict = "fcfs_wins"          # worth noticing in the artifact
+    ratio = out["fcfs"]["p90_ttfp"] / max(1e-9,
+                                          out["liveserve"]["p90_ttfp"])
+    # value column is the p90 gap in us (schema-honest); the raw
+    # speedup ratio rides in the derived field
+    row("gateway/p90_ttfp_gap",
+        (out["fcfs"]["p90_ttfp"] - out["liveserve"]["p90_ttfp"]) * 1e6,
+        f"{verdict};fcfs_over_liveserve={fmt(ratio, 2)}")
+    return out

@@ -1,23 +1,35 @@
 """Benchmark driver — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks sweeps.
+``--smoke`` is the CI perf-trajectory job: only the real-data-plane
+sections (paged_engine + gateway) on tiny configs. ``--json-out FILE``
+additionally serializes every row (plus per-section timings) as JSON —
+the artifact the smoke workflow uploads so a perf history accumulates.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+SMOKE_SECTIONS = ("paged_engine", "gateway")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config real-data-plane sections only "
+                         "(implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--json-out", default=None,
+                    help="write all rows + timings to this JSON file")
     args = ap.parse_args()
 
-    from benchmarks import eviction_index, kernel_bench, \
-        paged_engine_bench, roofline_report
+    from benchmarks import common, eviction_index, gateway_bench, \
+        kernel_bench, paged_engine_bench, roofline_report
     from benchmarks import serving_suite as S
 
     benches = {
@@ -34,24 +46,50 @@ def main() -> None:
         "continuity_timeline": S.continuity_timeline,  # Fig. 18
         "eviction_index": eviction_index.run,        # Table 1
         "paged_engine": paged_engine_bench.run,      # real data plane
+        "gateway": gateway_bench.run,                # DESIGN.md §4
         "kernels": kernel_bench.run,
         "roofline": roofline_report.run,             # §Roofline
     }
     only = set(args.only.split(",")) if args.only else None
+    quick = args.quick or args.smoke
+    if args.smoke:
+        only = set(SMOKE_SECTIONS) & (only or set(SMOKE_SECTIONS))
+        if not only:
+            ap.error(f"--only selects no smoke sections "
+                     f"(smoke runs {','.join(SMOKE_SECTIONS)})")
     print("name,us_per_call,derived")
     t0 = time.time()
+    timings = {}
+    errors = 0
     for name, fn in benches.items():
         if only and name not in only:
             continue
         t1 = time.time()
         try:
-            fn(quick=args.quick)
+            fn(quick=quick)
         except Exception as e:                       # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}",
                   file=sys.stderr)
-            print(f"{name}/ERROR,0.0,{type(e).__name__}")
-        print(f"# {name} done in {time.time()-t1:.1f}s", flush=True)
-    print(f"# total {time.time()-t0:.1f}s")
+            # through row() so the crash also lands in the JSON artifact
+            common.row(f"{name}/ERROR", 0.0, type(e).__name__)
+            errors += 1
+        timings[name] = time.time() - t1
+        print(f"# {name} done in {timings[name]:.1f}s", flush=True)
+    total = time.time() - t0
+    print(f"# total {total:.1f}s")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"rows": common.ROWS, "section_s": timings,
+                       "total_s": total,
+                       "mode": ("smoke" if args.smoke
+                                else "quick" if args.quick else "full")},
+                      f, indent=1)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json_out}",
+              flush=True)
+    if errors and args.smoke:
+        # the CI smoke job must go red when a section breaks — a green
+        # run with ERROR rows would silently stop measuring
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,12 @@ class PlaybackState:
 
     ``play_end`` is the wall-clock instant buffered audio runs out;
     appending audio at time t extends it (opening a gap if t > play_end).
+
+    Robust to degenerate client reports: a zero/negative-duration chunk
+    never marks playback as started (an empty packet is not first
+    audio), out-of-order appends (t below an earlier append's t) queue
+    behind the existing buffer without rewinding the timeline, and
+    ``play_end`` is monotone non-decreasing throughout.
     """
     started: bool = False
     start_time: float = 0.0
@@ -30,6 +36,8 @@ class PlaybackState:
     complete: bool = False           # server finished generating the reply
 
     def append(self, now: float, dur_s: float) -> None:
+        if dur_s <= 0.0 and not self.started:
+            return                   # empty chunk cannot start playback
         if not self.started:
             self.started = True
             self.start_time = now
@@ -40,8 +48,8 @@ class PlaybackState:
             self.max_gap_s = max(self.max_gap_s, gap)
             self.n_gaps += 1
             self.play_end = now
-        self.appended_s += dur_s
-        self.play_end += dur_s
+        self.appended_s += max(0.0, dur_s)
+        self.play_end += max(0.0, dur_s)
 
     def buffer_s(self, now: float) -> float:
         """Playable audio waiting at the client (the P_i^s of audio stages)."""
@@ -50,9 +58,12 @@ class PlaybackState:
         return max(0.0, self.play_end - now)
 
     def consumed_s(self, now: float) -> float:
+        """Audio the client has heard by ``now``; clamped non-negative so
+        an out-of-order (stale-timestamped) query after a gap cannot
+        report negative consumption."""
         if not self.started:
             return 0.0
-        return self.appended_s - self.buffer_s(now)
+        return max(0.0, self.appended_s - self.buffer_s(now))
 
 
 @dataclass

@@ -10,6 +10,13 @@ Batch formation scans Concat(U0, U1, U2) against the round budgets
 (token budget + free KV blocks). Fail-closed: a request whose session has
 no playback telemetry classifies as U1 (first-audio path) and missing U2
 utility inputs reduce U2 to ready-age order — matching §6.
+
+The scheduler is clock-agnostic: ``now`` is whatever the caller's clock
+says, so the same Algorithm 1 runs under the simulator's virtual clock
+and the realtime gateway's scaled wall clock (DESIGN.md §4). Pacing
+(class 3) is the playback-frontier generation cap: a session whose
+client buffer exceeds ``p_max_s`` is held until the buffer drains, so
+decode never runs more than the configured margin ahead of playback.
 """
 from __future__ import annotations
 
@@ -164,6 +171,16 @@ class UrgencyScheduler:
             r.last_scheduled = now
         return ScheduleDecision(batch=batch, chunks=chunks, classes=classes,
                                 utilities=utilities, held=held)
+
+    def hold_wake_s(self, decision: ScheduleDecision) -> Optional[float]:
+        """How long (in clock seconds) until the earliest pace-held
+        session drains back to the pacing threshold — playback consumes
+        buffer at 1 s/s, so a driver with nothing else to run can sleep
+        this long instead of spinning. None when nothing is held."""
+        if not decision.held:
+            return None
+        return min(max(0.01, buf - self.cfg.p_max_s)
+                   for _, buf in decision.held)
 
 
 class FCFSScheduler(UrgencyScheduler):

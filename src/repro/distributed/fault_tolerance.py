@@ -1,4 +1,4 @@
-"""Fault tolerance & elasticity for 1000+-node operation (DESIGN.md §7).
+"""Fault tolerance & elasticity for 1000+-node operation (DESIGN.md §8).
 
 - ``run_resilient``: checkpoint/restart supervisor — the training driver
   restarts from the last atomic checkpoint after a (simulated or real)

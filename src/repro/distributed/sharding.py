@@ -1,4 +1,4 @@
-"""Per-family sharding rules (DESIGN.md §7).
+"""Per-family sharding rules (DESIGN.md §8).
 
 Rules map parameter-tree paths to PartitionSpecs over a ('data','model')
 (+ optional leading 'pod') mesh:
@@ -73,7 +73,7 @@ class ShardingRules:
     def decode_2d(self) -> bool:
         """Big-model decode: weights 2D-sharded (d x heads), batch
         replicated, KV sequence sharded over BOTH axes — avoids per-token
-        FSDP weight gathers (DESIGN.md §7)."""
+        FSDP weight gathers (DESIGN.md §8)."""
         return self.fsdp and self.mode == "decode"
 
     def _seq(self, w: int):

@@ -6,40 +6,85 @@ Simulated pipeline (paper-scale policies on the virtual clock):
       --workload interactive --concurrency 12 --barge-in 0.5 \
       --system liveserve
 
-Real engine (paged data plane on actual JAX state, CPU-runnable):
+Live gateway (event-driven front-end over the real paged JAX data
+plane, scaled wall clock, CPU-runnable — DESIGN.md §4):
+
+  PYTHONPATH=src python -m repro.launch.serve --engine live \
+      --workload interactive --sessions 8 --barge-in 0.3 \
+      --system liveserve --clock-scale 4
+
+Real engine demo (scripted multi-turn conversation, no gateway):
 
   PYTHONPATH=src python -m repro.launch.serve --engine real
 
-runs a multi-turn barge-in conversation through PagedRealtimeEngine —
-physical evict/offload/preload-reload — and reports per-turn TTFT,
-reload stall, and re-prefill tokens (zero on reloaded turns).
+walks evict/offload/preload-reload/barge-in through
+PagedRealtimeEngine and reports per-turn TTFT, reload stall, and
+re-prefill tokens. Workload/system flags only apply to --engine
+sim|live; passing them with --engine real is an error, not a silent
+no-op.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
+# flags meaningful only for the sim / live engines; --engine real must
+# reject them explicitly instead of silently ignoring them
+_WORKLOAD_FLAGS = ("workload", "system", "sessions", "concurrency",
+                   "barge_in", "kv_gb")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", default="sim", choices=["sim", "real"],
-                    help="sim: event-driven simulator; real: paged JAX "
-                         "data plane (DESIGN.md §3)")
-    ap.add_argument("--model", default="qwen3-omni-like",
-                    choices=["qwen3-omni-like", "ming-omni-like"])
-    ap.add_argument("--workload", default="interactive",
+    ap.add_argument("--engine", default="sim",
+                    choices=["sim", "real", "live"],
+                    help="sim: event-driven simulator; live: asyncio "
+                         "gateway over the paged JAX data plane "
+                         "(DESIGN.md §4); real: scripted paged-engine "
+                         "demo (DESIGN.md §3)")
+    ap.add_argument("--model", default=None,
+                    choices=["qwen3-omni-like", "ming-omni-like"],
+                    help="sim engine only; live/real serve the reduced "
+                         "CPU-runnable config")
+    ap.add_argument("--workload", default=None,
                     choices=["sharegpt", "interactive", "mixed"])
-    ap.add_argument("--system", default="liveserve",
+    ap.add_argument("--system", default=None,
                     choices=["liveserve", "vllm-omni", "vllm-omni-wo"])
-    ap.add_argument("--sessions", type=int, default=32)
-    ap.add_argument("--concurrency", type=int, default=8)
-    ap.add_argument("--barge-in", type=float, default=0.0)
-    ap.add_argument("--kv-gb", type=float, default=4.0)
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--concurrency", type=int, default=None)
+    ap.add_argument("--barge-in", type=float, default=None)
+    ap.add_argument("--kv-gb", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
+    # --engine live only
+    ap.add_argument("--clock-scale", type=float, default=None,
+                    help="live engine: wall-clock speedup factor")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="live engine: decode batch rows")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="live engine: KV pool size in pages")
     args = ap.parse_args()
 
+    if args.engine != "live":
+        live_only = [f"--{f.replace('_', '-')}" for f in
+                     ("clock_scale", "slots", "kv_pages")
+                     if getattr(args, f) is not None]
+        if live_only:
+            ap.error(f"{', '.join(live_only)} only apply to "
+                     f"--engine live")
+    if args.engine != "sim" and args.model is not None:
+        ap.error("--model only applies to --engine sim; live/real run "
+                 "the reduced CPU-runnable config")
+
     if args.engine == "real":
+        given = [f"--{f.replace('_', '-')}" for f in _WORKLOAD_FLAGS
+                 if getattr(args, f) is not None]
+        if given:
+            ap.error(
+                f"--engine real runs a fixed scripted demo and does not "
+                f"take {', '.join(given)}; use --engine live (real data "
+                f"plane under load) or --engine sim (paper-scale "
+                f"simulation)")
         from repro.serving.paged_engine import run_multiturn_demo
         out = run_multiturn_demo(
             seed=args.seed,
@@ -48,22 +93,60 @@ def main() -> None:
             print(json.dumps(out, indent=1, default=str))
         return
 
-    from repro.serving.costmodel import PIPELINES
-    from repro.serving.simulator import run_sim
-    from repro.serving.workload import WorkloadConfig
+    # shared workload defaults for sim and live
+    workload = args.workload or "interactive"
+    system = args.system or "liveserve"
+    sessions = args.sessions if args.sessions is not None else 32
+    barge_in = args.barge_in if args.barge_in is not None else 0.0
 
-    systems = {
-        "liveserve": dict(policy="liveserve"),
-        "vllm-omni": dict(policy="fcfs", kv_policy="lru", preload=False),
-        "vllm-omni-wo": dict(policy="fcfs", kv_policy="none",
-                             preload=False),
-    }
-    pipe = PIPELINES[args.model](kv_capacity_gb=args.kv_gb)
-    wl = WorkloadConfig(kind=args.workload, num_sessions=args.sessions,
-                        concurrency=args.concurrency, seed=args.seed,
-                        p_barge_in=args.barge_in)
-    m = run_sim(pipe, wl, until=3600.0, **systems[args.system])
-    s = m.summary()
+    if args.engine == "live":
+        bad = [n for n, v in (("--kv-gb", args.kv_gb),
+                              ("--concurrency", args.concurrency))
+               if v is not None]
+        if bad:
+            ap.error(f"--engine live is open-loop on a page pool; "
+                     f"{', '.join(bad)} do not apply (use --kv-pages "
+                     f"for pool size)")
+        policies = {"liveserve": "liveserve", "vllm-omni": "fcfs"}
+        if system not in policies:
+            ap.error(f"--engine live supports --system "
+                     f"{'|'.join(policies)} (the paged data plane needs "
+                     f"an offload tier; 'vllm-omni-wo' discards KV — "
+                     f"use --engine sim for that baseline)")
+        from repro.serving.gateway import run_gateway_workload
+        m, gw = run_gateway_workload(
+            policy=policies[system], kind=workload, sessions=sessions,
+            barge_in=barge_in, seed=args.seed,
+            scale=(args.clock_scale
+                   if args.clock_scale is not None else 4.0),
+            slots=args.slots if args.slots is not None else 8,
+            num_pages=args.kv_pages,
+            frontier_cap_s=3.0 if system == "liveserve" else None)
+        s = m.summary()
+        s["rounds"] = gw.rounds
+        s["max_over_frontier_s"] = gw.max_over_frontier_s
+    else:
+        from repro.serving.costmodel import PIPELINES
+        from repro.serving.simulator import run_sim
+        from repro.serving.workload import WorkloadConfig
+
+        systems = {
+            "liveserve": dict(policy="liveserve"),
+            "vllm-omni": dict(policy="fcfs", kv_policy="lru",
+                              preload=False),
+            "vllm-omni-wo": dict(policy="fcfs", kv_policy="none",
+                                 preload=False),
+        }
+        pipe = PIPELINES[args.model or "qwen3-omni-like"](
+            kv_capacity_gb=args.kv_gb if args.kv_gb is not None else 4.0)
+        wl = WorkloadConfig(
+            kind=workload, num_sessions=sessions,
+            concurrency=(args.concurrency
+                         if args.concurrency is not None else 8),
+            seed=args.seed, p_barge_in=barge_in)
+        m = run_sim(pipe, wl, until=3600.0, **systems[system])
+        s = m.summary()
+
     if args.json:
         print(json.dumps(s, indent=1))
     else:

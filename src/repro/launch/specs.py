@@ -39,7 +39,7 @@ def cell_supported(cfg, shape_name: str) -> Optional[str]:
     """None if runnable; otherwise the skip reason (recorded in the table)."""
     if shape_name == "long_500k" and not cfg.sub_quadratic:
         return ("full quadratic attention: 500k-token decode needs "
-                "sub-quadratic state (DESIGN.md §5)")
+                "sub-quadratic state (DESIGN.md §6)")
     return None
 
 

@@ -8,7 +8,7 @@ Projections are kept as separate matrices (w_z / w_x / w_B / w_C / w_dt and
 separate depthwise convs for x vs B/C) rather than one fused in_proj: the
 x/dt/z paths are head-sharded under tensor parallelism while the grouped
 B/C paths are replicated — a fused matrix cannot carry a mixed
-PartitionSpec (DESIGN.md §7).
+PartitionSpec (DESIGN.md §8).
 """
 from __future__ import annotations
 

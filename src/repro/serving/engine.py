@@ -27,6 +27,13 @@ from repro.core.session import Phase, Request, RequestState
 from repro.models import decode_step, init_cache, init_params, prefill
 
 
+class RoundLimitExceeded(RuntimeError):
+    """``run_to_completion`` exhausted its round budget with work still
+    live. Raised instead of returning normally so a scheduler live-lock
+    (or a turn that never finishes) can't masquerade as a completed run
+    in tests and benchmarks."""
+
+
 @dataclass
 class SlotState:
     session_id: str
@@ -179,6 +186,10 @@ class RealtimeLLMEngine:
             if not self.active():
                 break
             self.step()
+        if self.active():
+            raise RoundLimitExceeded(
+                f"{len(self.active())} slots still live after "
+                f"{max_rounds} rounds")
         return {s.session_id: s.tokens
                 for s in self.slot_state.values() if s is not None}
 

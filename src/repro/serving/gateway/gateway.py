@@ -1,0 +1,387 @@
+"""The realtime session gateway (DESIGN.md §4).
+
+An asyncio front-end holding many concurrent duplex sessions against one
+``PagedRealtimeEngine``. The inversion that matters: the *control plane*
+owns the step loop. Each round the gateway
+
+1. drains client events (speech, turn requests, barge-in, hangup) into
+   the monitor/preloader — the interaction plane;
+2. builds the candidate set: every live slot request plus every queued
+   turn not yet bound to a slot, minus decode slots past the hard
+   playback-frontier cap;
+3. asks ``core/scheduler.py`` (Algorithm 1) for the round's admission:
+   which turns attach to slots, which slots advance, what prefill chunk
+   each gets, who is pace-held behind the playback frontier;
+4. executes exactly that decision via ``engine.run_round`` and streams
+   the resulting audio chunks back to clients, feeding each session's
+   playback clock (``monitor.on_audio``).
+
+The engine never schedules for itself here — ``engine.step()`` is the
+self-driving demo path; the gateway calls ``submit_turn``/``run_round``
+with its own scheduler's output, so the same Algorithm 1 implementation
+that runs under the simulator's virtual clock runs against real paged
+JAX state under a scaled wall clock.
+
+Single-threaded asyncio discipline: every engine call happens on the
+event loop with no await inside, so rounds, barge-in aborts, and turn
+admissions are atomic with respect to each other — that is the
+"async-safe" contract, not locks.
+"""
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import (FCFSScheduler, RoundBudget,
+                                  SchedulerConfig, UrgencyScheduler)
+from repro.core.session import Phase, Request, RequestState
+from repro.serving.gateway.clock import ScaledWallClock
+from repro.serving.gateway.events import (AudioChunk, BargeIn, Hangup,
+                                          SessionClosed, SessionEvent,
+                                          SpeechEnd, SpeechStart, TurnDone,
+                                          TurnRequest, UserAudio)
+from repro.serving.metrics import Metrics, TurnRecord
+
+
+@dataclass
+class GatewayConfig:
+    policy: str = "liveserve"            # liveserve | fcfs
+    audio_per_token_s: float = 0.08      # playable audio per output token
+    round_token_budget: int = 4          # Algorithm 1 per-round budget
+    prefill_chunk: int = 4               # prompt tokens per granted round
+    # hard generation cap beyond the playback frontier (seconds of client
+    # buffer). None = rely on the scheduler's pacing class alone; set it
+    # to enforce the cap even under the KV-pressure pacing override.
+    frontier_cap_s: Optional[float] = None
+    sched: Optional[SchedulerConfig] = None
+    idle_sleep_s: float = 0.05           # scaled-clock wait when idle
+
+
+@dataclass
+class PendingTurn:
+    """A TurnRequest the scheduler has not yet admitted to a slot."""
+    session_id: str
+    prompt: np.ndarray
+    max_new_tokens: int
+    request: Request
+
+
+@dataclass
+class GatewaySession:
+    session_id: str
+    outbox: asyncio.Queue
+    turn_no: int = -1                    # last TurnRequest's index
+    closed: bool = False
+
+
+class SessionHandle:
+    """Client side of one duplex session (in-process transport)."""
+
+    def __init__(self, gateway: "RealtimeGateway", gs: GatewaySession):
+        self._gw = gateway
+        self._gs = gs
+        self.session_id = gs.session_id
+
+    async def send(self, ev: SessionEvent) -> None:
+        ev.t = self._gw.clock.now()
+        await self._gw._inbox.put(ev)
+
+    async def recv(self) -> SessionEvent:
+        return await self._gs.outbox.get()
+
+
+class RealtimeGateway:
+    def __init__(self, engine, *, cfg: Optional[GatewayConfig] = None):
+        self.engine = engine
+        self.cfg = cfg or GatewayConfig()
+        self.clock = engine.clock
+        assert hasattr(self.clock, "real_s"), \
+            "gateway needs a ScaledWallClock-like clock on the engine " \
+            "(sim time and wall time must be the same timeline)"
+        sc = self.cfg.sched or SchedulerConfig()
+        # a prefill chunk larger than the round budget can never be
+        # admitted — Algorithm 1's head-of-line break would then hold it
+        # (and everything behind it) forever
+        chunk = max(1, min(self.cfg.prefill_chunk,
+                           self.cfg.round_token_budget))
+        if self.cfg.policy == "liveserve":
+            self.scheduler = UrgencyScheduler(
+                sc, engine.monitor, stage="thinker",
+                kv_occupancy=engine.kv.occupancy,
+                prefill_chunk=chunk)
+        else:
+            self.scheduler = FCFSScheduler(
+                engine.monitor, stage="thinker", prefill_chunk=chunk)
+        self._inbox: asyncio.Queue = asyncio.Queue()
+        self._sessions: Dict[str, GatewaySession] = {}
+        self._pending: Dict[str, PendingTurn] = {}
+        self._recs: Dict[Tuple[str, int], TurnRecord] = {}
+        self._metrics = Metrics()
+        self._stopping = False
+        self._force_stop = False
+        self.rounds = 0
+        # frontier telemetry: worst observed client buffer beyond the
+        # configured cap at token-emission time (the §4 invariant)
+        self.max_over_frontier_s = 0.0
+
+    # ------------------------------------------------------------ clients
+    def connect(self, session_id: str) -> SessionHandle:
+        assert session_id not in self._sessions, session_id
+        gs = GatewaySession(session_id, asyncio.Queue())
+        self._sessions[session_id] = gs
+        return SessionHandle(self, gs)
+
+    def stop(self, force: bool = False) -> None:
+        """Finish in-flight work, then exit the serve loop. ``force``
+        exits at the next idle point even with work still queued (the
+        harness uses it when the load's deadline lapses)."""
+        self._stopping = True
+        self._force_stop = self._force_stop or force
+
+    def metrics(self) -> Metrics:
+        self._metrics.sim_end = self.clock.now()
+        return self._metrics
+
+    # ------------------------------------------------------------ records
+    def _rec(self, sid: str) -> TurnRecord:
+        gs = self._sessions[sid]
+        key = (sid, gs.turn_no)
+        rec = self._recs.get(key)
+        if rec is None:
+            rec = TurnRecord(session_id=sid, turn_index=gs.turn_no)
+            self._recs[key] = rec
+            self._metrics.turns.append(rec)
+        return rec
+
+    # ------------------------------------------------------------ events
+    def _handle(self, ev: SessionEvent) -> None:
+        sid = ev.session_id
+        eng = self.engine
+        if isinstance(ev, SpeechStart):
+            # fires the §5.2 speech-time preload while the user talks
+            eng.user_speech_start(sid, expected_dur_s=ev.expected_dur_s)
+        elif isinstance(ev, UserAudio):
+            pass    # audio payload is transport metadata; the VAD
+            #         events (SpeechStart/End) carry the policy signal
+        elif isinstance(ev, SpeechEnd):
+            eng.monitor.on_speech_end(sid)
+        elif isinstance(ev, TurnRequest):
+            self._on_turn_request(ev)
+        elif isinstance(ev, BargeIn):
+            self._on_barge_in(ev)
+        elif isinstance(ev, Hangup):
+            self._on_hangup(sid)
+
+    def _on_turn_request(self, ev: TurnRequest) -> None:
+        sid = ev.session_id
+        gs = self._sessions[sid]
+        gs.turn_no += 1
+        now = self.clock.now()
+        sess = self.engine.sessions.get(sid)
+        req = Request(session_id=sid, stage="thinker",
+                      turn_index=gs.turn_no, arrival_time=now,
+                      prompt_len=int(len(ev.prompt)),
+                      context_len=sess.kv_len if sess else 0,
+                      max_new_tokens=ev.max_new_tokens,
+                      audio_per_token_s=self.cfg.audio_per_token_s)
+        self._pending[sid] = PendingTurn(sid, np.asarray(ev.prompt,
+                                                         np.int32),
+                                         ev.max_new_tokens, req)
+        rec = self._rec(sid)
+        rec.speech_end = now
+
+    def _slot_of(self, sid: str) -> Optional[int]:
+        for i, s in self.engine.slot_state.items():
+            if s is not None and s.session_id == sid:
+                return i
+        return None
+
+    def _on_barge_in(self, ev: BargeIn) -> None:
+        sid = ev.session_id
+        eng = self.engine
+        now = self.clock.now()
+        slot = self._slot_of(sid)
+        gs = self._sessions[sid]
+        rec = self._recs.get((sid, gs.turn_no))
+        view = eng.monitor.view(sid)
+        drained = rec is not None and rec.completed and (
+            view is None or view.playback.buffer_s(now) <= 0)
+        if drained and slot is None and sid not in self._pending:
+            # mirror the simulator: a barge-in after playback fully
+            # drained is a pure no-op — it must not mark the session
+            # interrupted (that would skip the reply-gap EMA and keep
+            # its idle KV immediate-reuse-protected)
+            return
+        pend = self._pending.pop(sid, None)
+        if pend is not None:
+            pend.request.state = RequestState.ABORTED
+        if rec is not None and not drained:
+            # during decode or playback the barge cuts the turn
+            rec.barged = True
+            heard = view.playback.consumed_s(now) if view else 0.0
+            rec.audio_heard_s = heard
+            heard_tokens = int(heard / self.cfg.audio_per_token_s)
+            rec.talker_wasted = max(0, rec.talker_generated - heard_tokens)
+            rec.finish_time = now
+        # aborts the live turn (keeping committed pages) and fires the
+        # barge-in preload trigger; no-op on the slot if none is live
+        eng.barge_in(sid, expected_dur_s=ev.expected_dur_s)
+        if slot is None:
+            eng.monitor.on_barge_in(sid)     # slot path already did it
+        if slot is not None or pend is not None:
+            gs.outbox.put_nowait(TurnDone(
+                sid, t=now, turn_index=gs.turn_no, aborted=True,
+                generated=rec.talker_generated if rec else 0))
+
+    def _on_hangup(self, sid: str) -> None:
+        eng = self.engine
+        gs = self._sessions[sid]
+        if self._slot_of(sid) is not None:
+            eng.abort(sid)
+        self._pending.pop(sid, None)
+        if sid in eng.sessions and not eng.sessions[sid].ended:
+            eng.end_session(sid)
+        gs.closed = True
+        self._metrics.completed_sessions += 1
+        gs.outbox.put_nowait(SessionClosed(sid, t=self.clock.now()))
+
+    # ------------------------------------------------------------ rounds
+    def _over_frontier(self, sid: str) -> bool:
+        cap = self.cfg.frontier_cap_s
+        if cap is None:
+            return False
+        buf = self.engine.monitor.playback_buffer_s(sid)
+        return buf is not None and buf > cap
+
+    def _round(self) -> bool:
+        """One scheduler-driven round. Returns True if any work ran."""
+        eng = self.engine
+        now = self.clock.now()
+        ready: List[Request] = []
+        owner: Dict[int, tuple] = {}
+        for i, s in eng.slot_state.items():
+            if s is None or not s.request.is_live():
+                continue
+            if s.request.generated >= s.request.max_new_tokens:
+                continue
+            if s.request.phase == Phase.DECODE \
+                    and self._over_frontier(s.session_id):
+                continue                     # hard frontier cap (§4)
+            ready.append(s.request)
+            owner[s.request.req_id] = ("slot", i)
+        for sid, p in self._pending.items():
+            ready.append(p.request)
+            owner[p.request.req_id] = ("pending", sid)
+        if not ready:
+            return False
+        budget = RoundBudget(
+            token_budget=self.cfg.round_token_budget,
+            free_kv_blocks=eng.kv.free_blocks
+            + eng.kv.reclaimable_blocks(now),
+            max_batch=eng.slots, block_size=eng.page_size)
+        decision = self.scheduler.schedule(ready, budget, now)
+        self.last_decision = decision
+        chunks: Dict[int, int] = {}
+        admitted = False
+        for r in decision.batch:
+            kind, key = owner[r.req_id]
+            if kind == "slot":
+                chunks[key] = decision.chunks[r.req_id]
+                continue
+            if eng.free_slot() is None:
+                continue                     # all slots busy; stay queued
+            p = self._pending.pop(key)
+            eng.submit_turn(key, p.prompt, p.max_new_tokens,
+                            request=r)       # reload path runs here
+            self._rec(key).reload_stall_s = r.reload_stall_s
+            admitted = True                  # prefill starts next round
+        if not chunks:
+            return admitted
+        sids = {i: eng.slot_state[i].session_id for i in chunks}
+        events = eng.run_round(chunks)
+        self.rounds += 1
+        self._dispatch(events, sids)
+        return True
+
+    def _dispatch(self, events: Dict[int, List[tuple]],
+                  sids: Dict[int, str]) -> None:
+        eng = self.engine
+        apt = self.cfg.audio_per_token_s
+        for slot, evs in events.items():
+            sid = sids[slot]
+            gs = self._sessions[sid]
+            rec = self._rec(sid)
+            for kind, val in evs:
+                now = self.clock.now()
+                if kind == "token":
+                    if rec.ttfp is None:
+                        rec.ttfp = now - rec.speech_end
+                        rec.text_ttft = rec.ttfp
+                    eng.monitor.on_audio(sid, apt)
+                    rec.audio_delivered_s += apt
+                    rec.talker_generated += 1
+                    if self.cfg.frontier_cap_s is not None:
+                        buf = eng.monitor.playback_buffer_s(sid) or 0.0
+                        self.max_over_frontier_s = max(
+                            self.max_over_frontier_s,
+                            buf - self.cfg.frontier_cap_s)
+                    gs.outbox.put_nowait(AudioChunk(
+                        sid, t=now, turn_index=gs.turn_no, dur_s=apt,
+                        token=val))
+                elif kind == "finished":
+                    v = eng.monitor.view(sid)
+                    rec.max_gap_s = (v.playback.max_gap_s
+                                     if v.playback.gap_s else 0.0)
+                    rec.n_gaps = v.playback.n_gaps
+                    rec.gen_span_s = now - rec.speech_end - (rec.ttfp or 0.0)
+                    rec.completed = True
+                    rec.finish_time = now
+                    gs.outbox.put_nowait(TurnDone(
+                        sid, t=now, turn_index=gs.turn_no, aborted=False,
+                        generated=val))
+
+    # ------------------------------------------------------------ serve
+    def _drain(self) -> int:
+        n = 0
+        while True:
+            try:
+                ev = self._inbox.get_nowait()
+            except asyncio.QueueEmpty:
+                break
+            self._handle(ev)
+            n += 1
+        return n
+
+    def _live_work(self) -> bool:
+        if self._pending:
+            return True
+        return any(s is not None and s.request.is_live()
+                   for s in self.engine.slot_state.values())
+
+    async def run(self) -> None:
+        """Serve until ``stop()`` is called and in-flight work drains."""
+        while True:
+            self._drain()
+            if self._round():
+                await asyncio.sleep(0)       # let client tasks react
+                continue
+            if self._force_stop:
+                return
+            if self._stopping and self._inbox.empty() \
+                    and not self._live_work():
+                return
+            wake = self.cfg.idle_sleep_s
+            held = self.scheduler.hold_wake_s(
+                getattr(self, "last_decision", None)) \
+                if getattr(self, "last_decision", None) else None
+            if held is not None:
+                wake = min(wake, held)
+            try:
+                ev = await asyncio.wait_for(
+                    self._inbox.get(), timeout=self.clock.real_s(wake))
+                self._handle(ev)
+            except asyncio.TimeoutError:
+                pass

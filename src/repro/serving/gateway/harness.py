@@ -1,0 +1,138 @@
+"""One-call end-to-end gateway runner (DESIGN.md §4).
+
+Shared by ``launch/serve.py --engine live``, ``benchmarks/
+gateway_bench.py``, the examples, and the integration tests: build a
+laptop-scale model + ``PagedRealtimeEngine`` on a ``ScaledWallClock``,
+put a ``RealtimeGateway`` with the requested policy in front of it, and
+replay a ``serving/workload.py`` trace through in-process clients.
+Returns the same ``Metrics`` object the simulator produces, so
+sim-vs-real comparisons are a dict-diff away.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import SchedulerConfig
+from repro.serving.gateway.client import LoadGenConfig, run_load
+from repro.serving.gateway.clock import ScaledWallClock
+from repro.serving.gateway.gateway import GatewayConfig, RealtimeGateway
+from repro.serving.metrics import Metrics
+from repro.serving.workload import WorkloadConfig
+
+
+def tiny_model(seed: int = 0, vocab: int = 331) -> Tuple[object, dict]:
+    """The CPU-runnable reduced config the live data plane serves."""
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                  vocab=vocab)
+    return cfg, init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _warm_engine(eng) -> None:
+    """Compile the fixed-shape paged step before the clock starts: a
+    padded all-scratch round exercises the exact signature every serving
+    round uses, so multi-second jit time never lands in TTFP."""
+    B = eng.slots
+    scratch = np.full((B,), eng.scratch_page, np.int32)
+    out = eng._step_fn(
+        eng.params, jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+        eng.k_pages, eng.v_pages,
+        jnp.full((B, eng.pages_per_seq), eng.scratch_page, jnp.int32),
+        jnp.ones((B,), jnp.int32), jnp.asarray(scratch),
+        jnp.zeros((B,), jnp.int32))
+    jax.block_until_ready(out[0])            # scratch-page writes only
+
+
+def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
+                  slots: int = 8, page_size: int = 8,
+                  pages_per_seq: int = 8, num_pages: Optional[int] = None,
+                  audio_per_token_s: float = 0.25,
+                  round_token_budget: int = 4, prefill_chunk: int = 4,
+                  frontier_cap_s: Optional[float] = None,
+                  sched_cfg: Optional[SchedulerConfig] = None,
+                  model: Optional[tuple] = None,
+                  seed: int = 0) -> RealtimeGateway:
+    from repro.serving.paged_engine import PagedRealtimeEngine
+    cfg, params = model if model is not None else tiny_model(seed)
+    clock = ScaledWallClock(scale)
+    eng = PagedRealtimeEngine(cfg, params, slots=slots,
+                              page_size=page_size,
+                              pages_per_seq=pages_per_seq,
+                              num_pages=num_pages, clock=clock)
+    _warm_engine(eng)
+    gw = RealtimeGateway(eng, cfg=GatewayConfig(
+        policy=policy, audio_per_token_s=audio_per_token_s,
+        round_token_budget=round_token_budget,
+        prefill_chunk=prefill_chunk, frontier_cap_s=frontier_cap_s,
+        sched=sched_cfg))
+    return gw
+
+
+def run_gateway_workload(*, policy: str = "liveserve",
+                         kind: str = "interactive", sessions: int = 8,
+                         barge_in: float = 0.0, seed: int = 0,
+                         arrival: str = "poisson", rate_rps: float = 2.0,
+                         scale: float = 8.0, max_turns: int = 2,
+                         max_prompt: int = 16, max_response: int = 12,
+                         speech_scale: float = 1.0,
+                         gateway: Optional[RealtimeGateway] = None,
+                         timeout_s: Optional[float] = None,
+                         **gw_kw) -> Tuple[Metrics, RealtimeGateway]:
+    """Replay an open-loop workload through a gateway; returns
+    (metrics, gateway). Pass ``gateway`` to use a pre-built (and
+    pre-compiled, but not yet run) stack; otherwise ``gw_kw`` goes to
+    ``build_gateway``. A gateway serves exactly one workload — its
+    session registry and metrics are single-run state.
+    """
+    if gateway is not None:
+        assert not gw_kw, "gateway already built; engine kwargs ignored"
+        assert gateway.cfg.policy == policy, \
+            f"gateway was built for {gateway.cfg.policy!r}, not {policy!r}"
+        assert not gateway._stopping and not gateway._sessions, \
+            "a RealtimeGateway serves one workload; build a fresh one"
+        gw = gateway
+    else:
+        gw = build_gateway(policy=policy, scale=scale, seed=seed,
+                           **gw_kw)
+    wl = WorkloadConfig(kind=kind, num_sessions=sessions, seed=seed,
+                        p_barge_in=barge_in, arrival=arrival,
+                        rate_rps=rate_rps)
+    lcfg = LoadGenConfig(workload=wl, vocab=gw.engine.cfg.vocab_size,
+                         max_prompt=max_prompt, max_response=max_response,
+                         max_turns=max_turns,
+                         audio_per_token_s=gw.cfg.audio_per_token_s,
+                         speech_scale=speech_scale, seed=seed)
+
+    async def main():
+        gw.clock.restart()
+        serve = asyncio.create_task(gw.run())
+        load = asyncio.create_task(run_load(gw, lcfg))
+        try:
+            done, _ = await asyncio.wait(
+                {serve, load}, timeout=timeout_s,
+                return_when=asyncio.FIRST_COMPLETED)
+            if serve in done and load not in done:
+                # the serve loop died under live clients: surface its
+                # error instead of letting every client block forever
+                serve.result()
+                raise RuntimeError("gateway serve loop exited early")
+            if load not in done:
+                raise asyncio.TimeoutError(
+                    f"load generator exceeded {timeout_s}s")
+            load.result()                # propagate client errors
+        except BaseException:
+            gw.stop(force=True)
+            load.cancel()
+            await asyncio.gather(serve, load, return_exceptions=True)
+            raise
+        gw.stop()
+        await serve                      # surface late serve errors
+
+    asyncio.run(main())
+    return gw.metrics(), gw

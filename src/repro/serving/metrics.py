@@ -1,0 +1,97 @@
+"""Serving metrics shared by the virtual-clock simulator and the
+realtime gateway.
+
+``TurnRecord`` / ``Metrics`` used to live inside ``serving/simulator.py``;
+they are a standalone module so the gateway's collector produces the
+*same object* (and therefore the same ``summary()`` schema) as the
+simulator — sim-vs-real policy behavior is directly comparable, and a
+summary-key drift between the two planes is impossible by construction.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class TurnRecord:
+    session_id: str
+    turn_index: int
+    speech_end: float = 0.0
+    ttfp: Optional[float] = None           # audio time-to-first-packet
+    text_ttft: Optional[float] = None
+    audio_delivered_s: float = 0.0
+    audio_heard_s: float = 0.0
+    gen_span_s: float = 0.0
+    max_gap_s: float = 0.0
+    n_gaps: int = 0
+    talker_generated: int = 0
+    talker_wasted: int = 0
+    barged: bool = False
+    reload_stall_s: float = 0.0
+    completed: bool = False
+    finish_time: float = 0.0
+
+    @property
+    def continuous(self) -> bool:
+        return self.max_gap_s <= 0.100
+
+    @property
+    def rtf(self) -> Optional[float]:
+        if self.audio_delivered_s <= 0 or self.ttfp is None:
+            return None
+        return self.gen_span_s / self.audio_delivered_s
+
+
+@dataclass
+class Metrics:
+    turns: List[TurnRecord] = field(default_factory=list)
+    completed_sessions: int = 0
+    sim_end: float = 0.0
+
+    def ttfps(self):
+        return sorted(t.ttfp for t in self.turns if t.ttfp is not None)
+
+    def percentile(self, vals, p):
+        if not vals:
+            return float("nan")
+        i = min(len(vals) - 1, int(math.ceil(p / 100 * len(vals))) - 1)
+        return vals[max(0, i)]
+
+    def p90_ttfp(self):
+        return self.percentile(self.ttfps(), 90)
+
+    def continuity(self):
+        done = [t for t in self.turns
+                if t.completed and not t.barged and t.ttfp is not None]
+        if not done:
+            return float("nan")
+        return sum(t.continuous for t in done) / len(done)
+
+    def waste_ratio(self):
+        gen = sum(t.talker_generated for t in self.turns)
+        waste = sum(t.talker_wasted for t in self.turns)
+        return waste / gen if gen else 0.0
+
+    def completed_rps(self):
+        n = sum(1 for t in self.turns if t.completed or t.barged)
+        return n / self.sim_end if self.sim_end > 0 else 0.0
+
+    def summary(self) -> dict:
+        tt = self.ttfps()
+        rtfs = sorted(t.rtf for t in self.turns if t.rtf is not None)
+        stalls = [t.reload_stall_s for t in self.turns]
+        return {
+            "turns": len(self.turns),
+            "p50_ttfp": self.percentile(tt, 50),
+            "p90_ttfp": self.percentile(tt, 90),
+            "p95_ttfp": self.percentile(tt, 95),
+            "continuity": self.continuity(),
+            "waste_ratio": self.waste_ratio(),
+            "completed_rps": self.completed_rps(),
+            "p50_rtf": self.percentile(rtfs, 50),
+            "p90_rtf": self.percentile(rtfs, 90),
+            "mean_reload_stall": (sum(stalls) / len(stalls)
+                                  if stalls else 0.0),
+        }

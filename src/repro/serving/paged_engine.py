@@ -15,10 +15,15 @@ pages:
   host-numpy DRAM tier (bit-exact round-trip), and the
   ``SpeechPreloader`` reloads them during user speech so the next turn
   resumes with warm KV and zero re-prefill tokens.
-- The control plane is unchanged: ``UrgencyScheduler`` picks which slots
-  advance each round; scheduling affects *when* tokens appear, never
-  *which* (the §5.2 correctness contract, shared with the dense engine
-  and verified in tests/test_paged_engine.py).
+- The control plane decides; the engine executes. Two driving modes
+  share one data path: ``step()`` lets the engine's own
+  ``UrgencyScheduler`` pick the round (scripted demos), while the
+  realtime gateway (DESIGN.md §4) calls ``submit_turn``/``run_round``
+  with *its* scheduler's decision — per-round candidate set, per-slot
+  chunk budgets, chunked paged prefill interleaved with decode. Either
+  way scheduling affects *when* tokens appear, never *which* (the §5.2
+  correctness contract, shared with the dense engine and verified in
+  tests/test_paged_engine.py and tests/test_gateway.py).
 
 The decode batch is a fixed ``slots``-row batch (one compiled step for
 the whole run): unscheduled/empty rows are padded onto the scratch page,
@@ -52,7 +57,8 @@ from repro.models import layers as L
 from repro.models.model import _embed, _logits, _mlp_block
 from repro.serving.block_tables import BatchTables, LayerStackedPages, \
     assemble
-from repro.serving.engine import _StepClock, schedule_round
+from repro.serving.engine import RoundLimitExceeded, _StepClock, \
+    schedule_round
 
 
 # ======================================================================
@@ -95,6 +101,29 @@ def paged_decode_step(cfg, params, tokens, positions, k_pages, v_pages,
     return _logits(cfg, params, x)[:, 0], k_pages, v_pages
 
 
+# one jitted step per (config, interpret) shared across engine instances
+# — a policy-comparison harness (gateway liveserve vs fcfs on the same
+# model) pays the XLA compile once, not per engine. Values retain cfg so
+# the id() key can never be recycled; the cache is LRU-bounded so a
+# long-lived process churning through configs doesn't pin every compiled
+# executable forever (engines keep their own _step_fn reference, so
+# eviction only forfeits future sharing).
+_STEP_FN_CACHE: Dict[tuple, tuple] = {}
+_STEP_FN_CACHE_MAX = 8
+
+
+def _jitted_step(cfg, interpret: bool):
+    key = (id(cfg), interpret)
+    hit = _STEP_FN_CACHE.pop(key, None)
+    if hit is None:
+        hit = (cfg, jax.jit(functools.partial(paged_decode_step, cfg,
+                                              interpret=interpret)))
+    _STEP_FN_CACHE[key] = hit                  # re-insert: LRU order
+    while len(_STEP_FN_CACHE) > _STEP_FN_CACHE_MAX:
+        _STEP_FN_CACHE.pop(next(iter(_STEP_FN_CACHE)))
+    return hit[1]
+
+
 # ======================================================================
 # host-side session state
 # ======================================================================
@@ -105,6 +134,9 @@ class PagedSlot:
     request: Request
     pending_token: int              # next token to feed
     tokens: List[int] = field(default_factory=list)
+    # prompt tokens still to be teacher-forced (scheduler-driven chunked
+    # prefill via submit_turn/run_round; None on the synchronous paths)
+    prompt: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -174,8 +206,7 @@ class PagedRealtimeEngine:
             i: None for i in range(slots)}
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        self._step_fn = jax.jit(functools.partial(
-            paged_decode_step, cfg, interpret=interpret))
+        self._step_fn = _jitted_step(cfg, interpret)
         # telemetry
         self.reload_wall_s: List[float] = []   # measured host->device time
         self.offload_events: List[tuple] = []
@@ -237,24 +268,64 @@ class PagedRealtimeEngine:
 
     def add_session(self, session_id: str, prompt: np.ndarray,
                     max_new_tokens: int) -> int:
-        """Turn 0: prefill the prompt into pool pages; returns slot id."""
+        """Turn 0, synchronous path: prefill the prompt into pool pages
+        before returning; returns slot id."""
+        sess = self._prep_first_turn(session_id)
+        return self._begin_turn(sess, np.asarray(prompt, np.int32),
+                                max_new_tokens, first=True)
+
+    def start_turn(self, session_id: str, prompt: np.ndarray,
+                   max_new_tokens: int) -> int:
+        """A later turn reaches the LLM stage (synchronous path): reload
+        whatever KV is still offloaded (warm no-op on a preload hit),
+        then extend the paged context with the new prompt — the
+        committed history is never re-prefilled."""
+        sess = self._prep_next_turn(session_id)
+        return self._begin_turn(sess, np.asarray(prompt, np.int32),
+                                max_new_tokens, first=False)
+
+    def submit_turn(self, session_id: str, prompt: np.ndarray,
+                    max_new_tokens: int, *,
+                    request: Optional[Request] = None) -> int:
+        """Scheduler-drivable turn admission (DESIGN.md §4): bind a free
+        slot and run the reload path, but leave the request in PREFILL —
+        prompt tokens are teacher-forced through the shared fixed-batch
+        step as ``run_round`` chunks grant them (chunked paged prefill
+        that interleaves with other sessions' decode), and the first
+        output token appears the round the last prompt token is fed.
+        A pre-built ``request`` lets the control plane rank the turn
+        while it was still queued (its arrival_time is the instant the
+        utterance reached the gateway, preserving queue wait in TTFP).
+        Works for turn 0 and later turns alike."""
+        prompt = np.asarray(prompt, np.int32)
+        if session_id not in self.sessions:
+            sess = self._prep_first_turn(session_id)
+        else:
+            sess = self._prep_next_turn(session_id)
+        if request is not None:
+            sess.turn_arrival = min(sess.turn_arrival,
+                                    request.arrival_time)
+        slot = self.free_slot()
+        assert slot is not None, "no free decode slot"
+        req = self._make_request(sess, prompt, max_new_tokens,
+                                 request=request)
+        self.slot_state[slot] = PagedSlot(session_id, req, -1, [],
+                                          prompt=prompt)
+        self._sync_page_counts(session_id)
+        return slot
+
+    def _prep_first_turn(self, session_id: str) -> PagedSession:
         assert session_id not in self.sessions, \
-            "session exists — use start_turn for later turns"
+            "session exists — use start_turn/submit_turn for later turns"
         self.monitor.register(session_id)
+        self.monitor.on_turn_start(session_id, 0)
         sess = PagedSession(session_id)
         self.sessions[session_id] = sess
         sess.turn_arrival = self.clock.now()
         sess.reload_stall_s = 0.0
-        slot = self._begin_turn(sess, np.asarray(prompt, np.int32),
-                                max_new_tokens, first=True)
-        return slot
+        return sess
 
-    def start_turn(self, session_id: str, prompt: np.ndarray,
-                   max_new_tokens: int) -> int:
-        """A later turn reaches the LLM stage: reload whatever KV is still
-        offloaded (warm no-op on a preload hit), then extend the paged
-        context with the new prompt — the committed history is never
-        re-prefilled."""
+    def _prep_next_turn(self, session_id: str) -> PagedSession:
         sess = self.sessions[session_id]
         assert not sess.ended, f"{session_id} ended; KV pages are gone"
         sess.turn_index += 1
@@ -273,45 +344,59 @@ class PagedRealtimeEngine:
         if stall > 0:
             self.clock.tick(stall)          # on-path sync reload residual
         sess.reload_stall_s = stall
-        return self._begin_turn(sess, np.asarray(prompt, np.int32),
-                                max_new_tokens, first=False)
+        return sess
 
-    def _begin_turn(self, sess: PagedSession, prompt: np.ndarray,
-                    max_new_tokens: int, *, first: bool) -> int:
+    def _make_request(self, sess: PagedSession, prompt: np.ndarray,
+                      max_new_tokens: int, *,
+                      request: Optional[Request] = None) -> Request:
         sid = sess.session_id
-        slot = self.free_slot()
-        assert slot is not None, "no free decode slot"
         P = int(prompt.shape[0])
         assert sess.kv_len + P + max_new_tokens <= self.max_context, \
             f"{sid}: turn would exceed pages_per_seq*page_size context"
         self.kv.pin(sid)
         sess.base_pages = len(self.pool.seq(sid).pages)
         re_prefill = self.kv.recompute_tokens(sid)
-        req = Request(session_id=sid, stage="thinker",
-                      turn_index=sess.turn_index,
-                      arrival_time=sess.turn_arrival, prompt_len=P,
-                      context_len=sess.kv_len,
-                      max_new_tokens=max_new_tokens)
-        req.reload_stall_s = sess.reload_stall_s
-        self._grow(sid, sess.kv_len + P)
-        if first:
-            tok = self._prefill_dense(sess, prompt)
+        if request is None:
+            req = Request(session_id=sid, stage="thinker",
+                          turn_index=sess.turn_index,
+                          arrival_time=sess.turn_arrival, prompt_len=P,
+                          context_len=sess.kv_len,
+                          max_new_tokens=max_new_tokens)
         else:
-            tok = self._prefill_paged(slot, sess, prompt)
-        req.phase = Phase.DECODE
-        req.prefilled = P
-        req.first_output_time = self.clock.now()
-        self.slot_state[slot] = PagedSlot(sid, req, tok, [tok])
+            req = request
+            req.turn_index = sess.turn_index
+            req.prompt_len = P
+            req.context_len = sess.kv_len
+            req.max_new_tokens = max_new_tokens
+        req.reload_stall_s = sess.reload_stall_s
         sess.turn_stats.append({
             "turn": sess.turn_index,
             "context_tokens": req.context_len,
             "prompt_tokens": P,
-            "ttft_s": self.clock.now() - sess.turn_arrival,
+            "ttft_s": None,                 # set at first output token
             "reload_stall_s": sess.reload_stall_s,
             "re_prefill_tokens": re_prefill,
             "generated": 0,
             "aborted": False,
         })
+        return req
+
+    def _begin_turn(self, sess: PagedSession, prompt: np.ndarray,
+                    max_new_tokens: int, *, first: bool) -> int:
+        sid = sess.session_id
+        slot = self.free_slot()
+        assert slot is not None, "no free decode slot"
+        req = self._make_request(sess, prompt, max_new_tokens)
+        self._grow(sid, sess.kv_len + req.prompt_len)
+        if first:
+            tok = self._prefill_dense(sess, prompt)
+        else:
+            tok = self._prefill_paged(slot, sess, prompt)
+        req.phase = Phase.DECODE
+        req.prefilled = req.prompt_len
+        req.first_output_time = self.clock.now()
+        self.slot_state[slot] = PagedSlot(sid, req, tok, [tok])
+        sess.turn_stats[-1]["ttft_s"] = self.clock.now() - sess.turn_arrival
         self._sync_page_counts(sid)
         return slot
 
@@ -368,7 +453,7 @@ class PagedRealtimeEngine:
         committed pages) and treat the interruption as speech start."""
         self.abort(session_id)
         if expected_dur_s is not None:
-            self.monitor.view(session_id).expected_speech_end = \
+            self.monitor.register(session_id).expected_speech_end = \
                 self.clock.now() + expected_dur_s
         return self.preloader.on_speech_start(session_id, self.clock.now())
 
@@ -401,8 +486,10 @@ class PagedRealtimeEngine:
                 and s.request.generated < s.request.max_new_tokens]
 
     def step(self) -> List[int]:
-        """One scheduling round + one fixed-batch paged decode. Returns
-        scheduled slot ids."""
+        """One self-scheduled round: the engine's own scheduler picks the
+        slots, then one fixed-batch paged decode. Returns scheduled slot
+        ids. (The gateway bypasses this and calls ``run_round`` with its
+        own scheduler's decision — DESIGN.md §4.)"""
         self.clock.tick()
         act = self.active()
         if not act:
@@ -412,32 +499,81 @@ class PagedRealtimeEngine:
                                      block_size=self.page_size)
         if not sched_slots:
             return []
-        feeds = {}
-        for i in sched_slots:
-            s = self.slot_state[i]
-            sess = self.sessions[s.session_id]
-            self._grow(s.session_id, sess.kv_len + 1)
-            # best-effort lookahead: own the next page before the write
-            # that crosses into it, so the boundary token never waits on
-            # allocation/eviction (these are the in-flight pages a
-            # barge-in trims)
-            self._grow(s.session_id, sess.kv_len + 1 + self.page_size,
-                       best_effort=True)
-            feeds[i] = (s.session_id, s.pending_token)
-        out = self._run_rows(feeds)
-        for i in sched_slots:
-            s = self.slot_state[i]
-            sess = self.sessions[s.session_id]
-            sess.kv_len += 1
-            s.request.generated += 1
-            tok = int(np.argmax(out[i]))
-            s.pending_token = tok
-            if s.request.generated < s.request.max_new_tokens:
-                s.tokens.append(tok)
-            else:
-                s.request.state = RequestState.FINISHED
-                self._close_turn(i, aborted=False)
+        self.run_round({i: 1 for i in sched_slots})
         return sched_slots
+
+    def run_round(self, chunks: Dict[int, int]) -> Dict[int, List[tuple]]:
+        """Execute one already-scheduled round: ``chunks[slot]`` is the
+        token budget the control plane granted that slot this round.
+        A decode slot advances one token; a PREFILL slot (submit_turn)
+        teacher-forces up to its chunk of prompt tokens. Chunks > 1 run
+        as sequential sub-batches in which every other granted slot also
+        participates only once — so a long prompt never stalls concurrent
+        decode for more than one round's worth of work.
+
+        Returns per-slot event lists for the caller to stream out:
+        ``("prefill", n_prefilled)``, ``("token", tok)`` (playable output
+        token, the first of which marks TTFT), ``("finished", n_tokens)``.
+        Safe to interleave with ``abort``/``submit_turn`` between calls
+        (asyncio single-thread discipline: never called concurrently)."""
+        events: Dict[int, List[tuple]] = {i: [] for i in chunks}
+        for j in range(max(chunks.values(), default=0)):
+            feeds = {}
+            for i, c in chunks.items():
+                s = self.slot_state[i]
+                if s is None or not s.request.is_live():
+                    continue
+                r = s.request
+                if r.phase == Phase.PREFILL:
+                    if j < c and r.prefilled < r.prompt_len:
+                        feeds[i] = (s.session_id,
+                                    int(s.prompt[r.prefilled]))
+                elif j == 0 and r.generated < r.max_new_tokens:
+                    feeds[i] = (s.session_id, s.pending_token)
+            if not feeds:
+                break
+            for i in feeds:
+                s = self.slot_state[i]
+                sess = self.sessions[s.session_id]
+                self._grow(s.session_id, sess.kv_len + 1)
+                # best-effort lookahead: own the next page before the
+                # write that crosses into it, so the boundary token never
+                # waits on allocation/eviction (these are the in-flight
+                # pages a barge-in trims)
+                self._grow(s.session_id, sess.kv_len + 1 + self.page_size,
+                           best_effort=True)
+            out = self._run_rows(feeds)
+            for i in feeds:
+                s = self.slot_state[i]
+                sess = self.sessions[s.session_id]
+                sess.kv_len += 1
+                r = s.request
+                tok = int(np.argmax(out[i]))
+                if r.phase == Phase.PREFILL:
+                    r.prefilled += 1
+                    if r.done_prefill:
+                        # the last prompt token's logits are the first
+                        # output token — same contract as the sync paths
+                        r.phase = Phase.DECODE
+                        r.first_output_time = self.clock.now()
+                        s.pending_token = tok
+                        s.tokens.append(tok)
+                        sess.turn_stats[-1]["ttft_s"] = \
+                            self.clock.now() - sess.turn_arrival
+                        events[i].append(("token", tok))
+                    else:
+                        events[i].append(("prefill", r.prefilled))
+                else:
+                    r.generated += 1
+                    s.pending_token = tok
+                    if r.generated < r.max_new_tokens:
+                        s.tokens.append(tok)
+                        events[i].append(("token", tok))
+                    else:
+                        r.state = RequestState.FINISHED
+                        self._close_turn(i, aborted=False)
+                        events[i].append(("finished", r.generated))
+        return events
 
     def _run_rows(self, feeds: Dict[int, tuple]) -> Dict[int, np.ndarray]:
         """Run one compiled step with `feeds[row] = (sid, token)`; other
@@ -479,6 +615,10 @@ class PagedRealtimeEngine:
             if not self.active():
                 break
             self.step()
+        if self.active():
+            raise RoundLimitExceeded(
+                f"{len(self.active())} slots still live after "
+                f"{max_rounds} rounds")
         out = {}
         for sid, sess in self.sessions.items():
             if sess.history:

@@ -15,8 +15,6 @@ Structure
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.kv_manager import KVManager
@@ -26,92 +24,12 @@ from repro.core.scheduler import (FCFSScheduler, RoundBudget,
                                   SchedulerConfig, UrgencyScheduler)
 from repro.core.session import Phase, Request, RequestState, Session, Turn
 from repro.serving.costmodel import PipelineSpec, StageSpec
+from repro.serving.metrics import Metrics, TurnRecord
 from repro.serving.simclock import EventQueue, VirtualClock
 from repro.serving.workload import WorkloadConfig, generate
 
-
-# ======================================================================
-@dataclass
-class TurnRecord:
-    session_id: str
-    turn_index: int
-    speech_end: float = 0.0
-    ttfp: Optional[float] = None           # audio time-to-first-packet
-    text_ttft: Optional[float] = None
-    audio_delivered_s: float = 0.0
-    audio_heard_s: float = 0.0
-    gen_span_s: float = 0.0
-    max_gap_s: float = 0.0
-    n_gaps: int = 0
-    talker_generated: int = 0
-    talker_wasted: int = 0
-    barged: bool = False
-    reload_stall_s: float = 0.0
-    completed: bool = False
-    finish_time: float = 0.0
-
-    @property
-    def continuous(self) -> bool:
-        return self.max_gap_s <= 0.100
-
-    @property
-    def rtf(self) -> Optional[float]:
-        if self.audio_delivered_s <= 0 or self.ttfp is None:
-            return None
-        return self.gen_span_s / self.audio_delivered_s
-
-
-@dataclass
-class Metrics:
-    turns: List[TurnRecord] = field(default_factory=list)
-    completed_sessions: int = 0
-    sim_end: float = 0.0
-
-    def ttfps(self):
-        return sorted(t.ttfp for t in self.turns if t.ttfp is not None)
-
-    def percentile(self, vals, p):
-        if not vals:
-            return float("nan")
-        i = min(len(vals) - 1, int(math.ceil(p / 100 * len(vals))) - 1)
-        return vals[max(0, i)]
-
-    def p90_ttfp(self):
-        return self.percentile(self.ttfps(), 90)
-
-    def continuity(self):
-        done = [t for t in self.turns
-                if t.completed and not t.barged and t.ttfp is not None]
-        if not done:
-            return float("nan")
-        return sum(t.continuous for t in done) / len(done)
-
-    def waste_ratio(self):
-        gen = sum(t.talker_generated for t in self.turns)
-        waste = sum(t.talker_wasted for t in self.turns)
-        return waste / gen if gen else 0.0
-
-    def completed_rps(self):
-        n = sum(1 for t in self.turns if t.completed or t.barged)
-        return n / self.sim_end if self.sim_end > 0 else 0.0
-
-    def summary(self) -> dict:
-        tt = self.ttfps()
-        rtfs = sorted(t.rtf for t in self.turns if t.rtf is not None)
-        stalls = [t.reload_stall_s for t in self.turns]
-        return {
-            "turns": len(self.turns),
-            "p50_ttfp": self.percentile(tt, 50),
-            "p90_ttfp": self.percentile(tt, 90),
-            "p95_ttfp": self.percentile(tt, 95),
-            "continuity": self.continuity(),
-            "waste_ratio": self.waste_ratio(),
-            "completed_rps": self.completed_rps(),
-            "p50_rtf": self.percentile(rtfs, 50),
-            "p90_rtf": self.percentile(rtfs, 90),
-            "mean_reload_stall": (sum(stalls) / len(stalls)
-                                  if stalls else 0.0),
-        }
+__all__ = ["Metrics", "TurnRecord", "Simulation", "StageEngine",
+           "Vocoder", "run_sim"]
 
 
 # ======================================================================
@@ -201,11 +119,10 @@ class StageEngine:
                              block_size=self.spec.block_size)
         decision = self.scheduler.schedule(ready, budget, now)
         if not decision.batch:
-            if decision.held:
+            wake = self.scheduler.hold_wake_s(decision)
+            if wake is not None:
                 # everything pace-held: re-kick when the earliest buffer
                 # drains back to the pacing threshold (playback is 1 s/s)
-                wake = min(max(0.01, buf - self.scheduler.cfg.p_max_s)
-                           for _, buf in decision.held)
                 self.sim.events.push_in(wake, self.kick)
             return
         admitted, prefill_tokens, decode_n = [], 0, 0

@@ -5,7 +5,7 @@ step directory, manifest written LAST (a crash mid-save never yields a
 readable-but-corrupt checkpoint). An async mode moves the host-side write
 off the training step (overlap with compute). ``restore_checkpoint``
 re-shards onto whatever mesh the restart runs with — including a
-*different* device count (elastic rescale, DESIGN.md §7): leaves are
+*different* device count (elastic rescale, DESIGN.md §8): leaves are
 host-side numpy, placement happens via the target shardings.
 """
 from __future__ import annotations

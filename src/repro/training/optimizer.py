@@ -3,7 +3,7 @@
 - adamw: fp32 master copy + two fp32 moments (small/medium configs).
 - adafactor: fp32 master + factored second moment (row/col statistics) —
   the production choice for the >=100B assigned configs, cutting optimizer
-  HBM from 12 bytes/param to ~4 bytes/param (DESIGN.md §7).
+  HBM from 12 bytes/param to ~4 bytes/param (DESIGN.md §8).
 
 State layouts mirror parameter layouts, so the ShardingRules param specs
 apply verbatim (ZeRO-style sharding falls out of FSDP at-rest specs).

@@ -1,5 +1,6 @@
 """Property tests: playback timeline invariants + workload generators."""
 import numpy as np
+import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core.monitor import PlaybackState, RuntimeMonitor
@@ -101,3 +102,128 @@ def test_arrival_processes():
     gaps = np.diff([0] + [s.arrival_time for s in burst])
     # bursty arrivals: higher dispersion than poisson
     assert np.std(gaps) / np.mean(gaps) > 0.8
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_interarrival_statistics_seeded(seed):
+    """Poisson inter-arrivals are exponential (CV ~ 1, mean ~ 1/rate);
+    burstgpt's square-wave rate modulation is strictly more dispersed at
+    the same mean rate; both are seed-deterministic."""
+    n, rate = 400, 4.0
+    pois = generate(WorkloadConfig(kind="sharegpt", num_sessions=n,
+                                   arrival="poisson", rate_rps=rate,
+                                   seed=seed))
+    gaps = np.diff([0.0] + [s.arrival_time for s in pois])
+    assert abs(np.mean(gaps) - 1.0 / rate) < 0.35 / rate
+    cv = np.std(gaps) / np.mean(gaps)
+    assert 0.8 < cv < 1.25                         # exponential: CV = 1
+    burst = generate(WorkloadConfig(kind="sharegpt", num_sessions=n,
+                                    arrival="burstgpt", rate_rps=rate,
+                                    seed=seed))
+    bgaps = np.diff([0.0] + [s.arrival_time for s in burst])
+    bcv = np.std(bgaps) / np.mean(bgaps)
+    assert bcv > cv                                # over-dispersed
+    again = generate(WorkloadConfig(kind="sharegpt", num_sessions=n,
+                                    arrival="burstgpt", rate_rps=rate,
+                                    seed=seed))
+    assert [s.arrival_time for s in burst] == \
+        [s.arrival_time for s in again]
+
+
+def test_barge_in_cut_anchored_after_ttfp():
+    """p_barge_in=1 cuts every turn; the cut is a fraction of the reply
+    audio, so driving the simulator shows every barge firing at/after
+    the turn's first audio packet — never before TTFP."""
+    from repro.serving.costmodel import PIPELINES
+    from repro.serving.simulator import run_sim
+
+    for s in generate(WorkloadConfig(kind="interactive", num_sessions=12,
+                                     p_barge_in=1.0, seed=5)):
+        for t in s.turns:
+            assert t.barge_in
+            # cut anchored inside the reply's audio span (tokens round
+            # down from the drawn audio duration, hence the +1)
+            assert 0.0 < t.barge_cut_s \
+                < 0.75 * (t.response_tokens + 1) * 0.08 + 1e-9
+    pipe = PIPELINES["qwen3-omni-like"](kv_capacity_gb=4.0)
+    wl = WorkloadConfig(kind="interactive", num_sessions=8,
+                        concurrency=4, p_barge_in=1.0, seed=5)
+    m = run_sim(pipe, wl, until=600.0)
+    barged = [t for t in m.turns if t.barged]
+    assert barged, "p_barge_in=1.0 must produce barge-ins"
+    for t in barged:
+        assert t.ttfp is not None, "barge fired before first audio"
+        # the cut lands at TTFP + barge_cut_s at the earliest
+        assert t.finish_time >= t.speech_end + t.ttfp - 1e-9
+
+
+# ---------------------------------------------------- playback edges
+def test_playback_zero_duration_append():
+    pb = PlaybackState()
+    pb.append(1.0, 0.0)
+    assert not pb.started                  # empty packet != first audio
+    assert pb.buffer_s(1.0) == 0.0
+    pb.append(2.0, 1.0)
+    assert pb.started and pb.start_time == 2.0
+    # zero-duration append after a drain still accounts the gap once
+    pb.append(4.5, 0.0)
+    assert pb.n_gaps == 1
+    assert pb.gap_s == pytest.approx(1.5)
+    assert pb.play_end == 4.5
+    assert pb.appended_s == 1.0
+    # negative durations never shrink the timeline
+    end = pb.play_end
+    pb.append(4.6, -3.0)
+    assert pb.play_end >= end
+    assert pb.appended_s == 1.0
+
+
+def test_playback_out_of_order_appends():
+    """Stale-timestamped appends queue behind the buffer: play_end stays
+    monotone, gaps are only ever opened by forward drains, and consumed
+    never goes negative."""
+    pb = PlaybackState()
+    pb.append(1.0, 2.0)                    # plays until 3.0
+    pb.append(0.5, 1.0)                    # out-of-order: queues to 4.0
+    assert pb.play_end == pytest.approx(4.0)
+    assert pb.n_gaps == 0 and pb.gap_s == 0.0
+    assert pb.consumed_s(0.2) >= 0.0       # stale query clamps
+    pb.append(6.0, 1.0)                    # 2s drain -> one gap
+    assert pb.n_gaps == 1 and pb.gap_s == pytest.approx(2.0)
+    assert pb.max_gap_s == pytest.approx(2.0)
+    assert pb.play_end == pytest.approx(7.0)
+
+
+@settings(max_examples=200, deadline=None)
+@given(events=st.lists(
+    st.tuples(st.floats(-3.0, 5.0),     # dt (negative = out-of-order)
+              st.floats(0.0, 4.0)),     # appended audio (0 allowed)
+    min_size=1, max_size=30))
+def test_playback_invariants_adversarial(events):
+    """gap/max_gap/n_gaps accounting stays consistent and play_end is
+    monotone under out-of-order and zero-duration appends."""
+    pb = PlaybackState()
+    t = 0.0
+    tq = 0.0                 # the monitor's clock is monotone even when
+    total = 0.0              # append event timestamps are stale
+    last_end = 0.0
+    gaps_seen = 0
+    for dt, dur in events:
+        t = max(0.0, t + dt)
+        tq = max(tq, t)
+        opens_gap = pb.started and t > pb.play_end
+        pb.append(t, dur)
+        gaps_seen += bool(opens_gap)
+        if pb.started:
+            total += dur
+        assert pb.play_end >= last_end - 1e-12          # monotone
+        last_end = pb.play_end
+        assert pb.n_gaps == gaps_seen
+        assert 0.0 <= pb.max_gap_s <= pb.gap_s + 1e-9
+        assert 0.0 <= pb.buffer_s(tq) <= total + 1e-9
+        assert 0.0 <= pb.consumed_s(tq) <= total + 1e-9
+        # timeline identity: everything appended is either still
+        # buffered or was consumed
+        assert abs(pb.consumed_s(tq) + pb.buffer_s(tq) - total) < 1e-6
+    assert pb.appended_s == pytest.approx(total)
