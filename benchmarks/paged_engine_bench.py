@@ -60,6 +60,32 @@ def run(quick: bool = False) -> None:
     us, n = _mean_step_us(paged, steps)
     row("paged_engine/paged_step", us, f"slots={slots};rounds={n}")
 
+    # tensor-sharded data plane (DESIGN.md §9): decode step time and
+    # tokens/s vs mesh shape. Needs >1 device — on CPU run under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI
+    # multidevice job does); on a single device the section reports a
+    # skip row so the JSON artifact stays schema-stable.
+    ndev = len(jax.devices())
+    mesh_shapes = [(1, m) for m in (2, 4, 8) if m <= ndev]
+    if ndev >= 4:
+        mesh_shapes.append((2, 2))
+    if not mesh_shapes:
+        row("paged_engine/sharded_step", 0.0,
+            f"skipped;devices={ndev};need>=2")
+    for d, m in mesh_shapes:
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        sharded = PagedRealtimeEngine(cfg, params, slots=slots,
+                                      page_size=16, pages_per_seq=16,
+                                      mesh=mesh)
+        admit(sharded)
+        sharded.step()
+        sharded.step()                     # warm the sharded jit cache
+        us, n = _mean_step_us(sharded, steps)
+        tok_s = slots / (us * 1e-6) if us else 0.0
+        row(f"paged_engine/sharded_step_{d}x{m}", us,
+            f"kind={sharded.layout.kind};slots={slots};rounds={n};"
+            f"tokens_s={tok_s:.0f}")
+
     # DRAM->HBM reload path: finish the turns (unpin), offload suffix
     # pages via the manager, then time the physical reload per page (the
     # engine's hook records the host->device wall time)

@@ -1,0 +1,226 @@
+"""Tensor-sharded paged KV plane (DESIGN.md §9).
+
+Shards the serving engine's page store over the ``'model'`` axis of a
+``('data', 'model')`` mesh, following the same divisibility rules as the
+parameter sharding in ``distributed/sharding.py``:
+
+- ``heads``  — KV heads divide the model axis: each shard owns
+  ``Hkv / M`` heads of every page. Attention is fully local per shard
+  (softmax is per head); shards' outputs are re-joined with an
+  ``all_gather`` over the head dim before the output projection.
+- ``slots``  — heads do not divide but the page size does (the common
+  case for the assigned archs, whose 2-8 KV heads never divide a
+  16-way axis — the rule table's "sequence over 'model'" branch): each
+  shard owns ``page / M`` token slots of every physical page. A shard
+  computes a *partial* online softmax over its slots
+  (``return_stats`` in the kernel) and the shards merge exactly:
+  ``m* = pmax(m)``, ``w_s = l_s * exp(m_s - m*)``,
+  ``o = psum(o_s * w_s) / psum(w_s)``.
+- ``replicated`` — neither divides: fall back to full replication
+  (every shard computes everything), mirroring ``ShardingRules._m``.
+
+Block tables, tokens, and all model weights stay **replicated** across
+'model' (and across 'data'): the paged plane's scaling target is KV
+memory and attention bandwidth, which dominate realtime multi-turn
+serving; weight tensor-parallelism composes later via
+``ShardingRules``. The decode batch is likewise replicated over 'data'
+— every shard runs the same fixed-slot batch, so the host-side control
+plane (pool, block tables, KV manager) is identical with and without a
+mesh and the offload/reload hooks move *sharded* pages through plain
+``np.asarray`` gathers / ``device_put`` scatters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.paged_attention import paged_attention
+
+
+class PagedKVLayout:
+    """How one engine's page store [L, P+1, page, Hkv, hd] shards."""
+
+    def __init__(self, cfg, mesh, page_size: int):
+        assert "model" in mesh.axis_names, mesh.axis_names
+        self.cfg = cfg
+        self.mesh = mesh
+        self.page_size = page_size
+        self.M = int(mesh.shape["model"])
+        if cfg.num_kv_heads % self.M == 0:
+            self.kind = "heads"
+        elif page_size % self.M == 0:
+            self.kind = "slots"
+        else:
+            self.kind = "replicated"
+
+    def __repr__(self):
+        return (f"PagedKVLayout(kind={self.kind!r}, M={self.M}, "
+                f"mesh={dict(self.mesh.shape)})")
+
+    # ------------------------------------------------------------ specs
+    def page_pspec(self, *, with_layers: bool = True) -> P:
+        """PartitionSpec for [L, P+1, page, Hkv, hd] (or the 4D
+        kernel-level [P, page, Hkv, hd] with ``with_layers=False``)."""
+        lead = (None,) if with_layers else ()
+        if self.kind == "heads":
+            return P(*lead, None, None, "model")
+        if self.kind == "slots":
+            return P(*lead, None, "model")
+        return P()
+
+    def page_sharding(self, *, with_layers: bool = True) -> NamedSharding:
+        return NamedSharding(self.mesh,
+                             self.page_pspec(with_layers=with_layers))
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # ------------------------------------------------------- shard body
+    def write_token(self, kc, vc, k, v, write_page, write_slot):
+        """Per-shard page write of one token per batch row.
+
+        Runs *inside* shard_map: ``kc``/``vc`` are local shards
+        [P+1, page_local, Hkv_local, hd]; ``k``/``v`` [B, Hkv, hd] are
+        the full (replicated) projections; ``write_page``/``write_slot``
+        [B] i32 are global coordinates.
+        """
+        if self.kind == "heads":
+            idx = jax.lax.axis_index("model")
+            hloc = kc.shape[2]
+            k = jax.lax.dynamic_slice_in_dim(k, idx * hloc, hloc, axis=1)
+            v = jax.lax.dynamic_slice_in_dim(v, idx * hloc, hloc, axis=1)
+            return (kc.at[write_page, write_slot].set(k),
+                    vc.at[write_page, write_slot].set(v))
+        if self.kind == "slots":
+            idx = jax.lax.axis_index("model")
+            psl = kc.shape[1]
+            own = (write_slot // psl) == idx
+            loc = write_slot % psl
+            keep = own[:, None, None]
+            k = jnp.where(keep, k, kc[write_page, loc])
+            v = jnp.where(keep, v, vc[write_page, loc])
+            return kc.at[write_page, loc].set(k), vc.at[write_page, loc].set(v)
+        return (kc.at[write_page, write_slot].set(k),
+                vc.at[write_page, write_slot].set(v))
+
+    def attend(self, q, kc, vc, block_tables, seq_lens, *,
+               interpret: bool = False):
+        """Per-shard paged attention + cross-shard combine.
+
+        Runs *inside* shard_map: ``q`` [B, Hq, D] is the full
+        (replicated) query; ``kc``/``vc`` are local page shards
+        [P+1, page_local, Hkv_local, hd]. Returns the full [B, Hq, D]
+        attention output, identical on every shard.
+        """
+        if self.kind == "heads":
+            idx = jax.lax.axis_index("model")
+            hq_loc = q.shape[1] // self.M
+            q_loc = jax.lax.dynamic_slice_in_dim(q, idx * hq_loc, hq_loc,
+                                                 axis=1)
+            a = paged_attention(q_loc, kc, vc, block_tables, seq_lens,
+                                interpret=interpret)
+            return jax.lax.all_gather(a, "model", axis=1, tiled=True)
+        if self.kind == "slots":
+            idx = jax.lax.axis_index("model")
+            psl = kc.shape[1]
+            # the shard's slots sit at global offset idx*psl inside each
+            # page; shifting seq_lens is equivalent to offsetting every
+            # local position (masking is the only use of positions here)
+            sl_eff = seq_lens - idx * psl
+            o, m, l = paged_attention(
+                q, kc, vc, block_tables, sl_eff,
+                pos_stride=self.page_size, return_stats=True,
+                interpret=interpret)
+            m_star = jax.lax.pmax(m, "model")
+            w = l * jnp.exp(m - m_star)                    # [B, Hq] f32
+            den = jax.lax.psum(w, "model")
+            num = jax.lax.psum(o.astype(jnp.float32) * w[..., None],
+                               "model")
+            a = num / jnp.maximum(den, 1e-30)[..., None]
+            return a.astype(q.dtype)
+        return paged_attention(q, kc, vc, block_tables, seq_lens,
+                               interpret=interpret)
+
+
+# ======================================================================
+# shard_map wrappers
+# ======================================================================
+def sharded_paged_attention(layout: PagedKVLayout, q, k_pages, v_pages,
+                            block_tables, seq_lens, *,
+                            interpret: bool = False):
+    """Global-view sharded paged attention: q [B, Hq, D] and
+    block_tables/seq_lens replicated; k_pages/v_pages [P, page, Hkv, D]
+    sharded per the layout. Drop-in equal to ``paged_attention``."""
+    spec = layout.page_pspec(with_layers=False)
+    rep = P()
+
+    def body(q, kp, vp, bt, sl):
+        return layout.attend(q, kp, vp, bt, sl, interpret=interpret)
+
+    f = shard_map(body, mesh=layout.mesh,
+                  in_specs=(rep, spec, spec, rep, rep), out_specs=rep,
+                  check_vma=False)
+    return f(q, k_pages, v_pages, block_tables, seq_lens)
+
+
+def sharded_flash_prefill(layout: PagedKVLayout, q, k, v, *,
+                          causal: bool = True, window=None,
+                          q_offset: int = 0, block_q: int = 128,
+                          block_kv: int = 128, interpret: bool = False):
+    """shard_map-wrapped chunked-prefill flash attention.
+
+    Heads shard over 'model' when divisible (fully local — softmax is
+    per head); otherwise every shard computes the full call (the
+    replication fallback). q [B, Hq, Sq, D]; k/v [B, Hkv, Skv, D].
+
+    Kernel-level building block, parity-pinned by
+    tests/test_sharded_plane.py but not yet on an engine path: the
+    engine's turn-0 prefill currently runs the replicated dense forward
+    and grafts into sharded pages, and turn-N prefill teacher-forces
+    through the sharded decode step. Wiring this into a chunked sharded
+    prefill is the follow-up that makes long-prompt admission scale
+    with the mesh (DESIGN.md §9)."""
+    kernel = functools.partial(flash_prefill, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_kv=block_kv, interpret=interpret)
+    Hq, Hkv = q.shape[1], k.shape[1]
+    if Hq % layout.M == 0 and Hkv % layout.M == 0:
+        spec = P(None, "model")
+        f = shard_map(kernel, mesh=layout.mesh,
+                      in_specs=(spec, spec, spec), out_specs=spec,
+                      check_vma=False)
+    else:
+        rep = P()
+        f = shard_map(kernel, mesh=layout.mesh,
+                      in_specs=(rep, rep, rep), out_specs=rep,
+                      check_vma=False)
+    return f(q, k, v)
+
+
+def make_sharded_step(cfg, layout: PagedKVLayout, *,
+                      interpret: bool = False):
+    """The sharded twin of ``serving.paged_engine.paged_decode_step``:
+    one jitted shard_map over the whole step — weights/tokens/tables
+    replicated in, pages sharded in/out, logits replicated out. The
+    body is the *same* ``paged_decode_step`` code path with this
+    layout's write/attend plane swapped in, so sharded and single-
+    device engines cannot drift."""
+    from repro.serving.paged_engine import paged_decode_step
+
+    body = functools.partial(paged_decode_step, cfg, interpret=interpret,
+                             plane=layout)
+    spec = layout.page_pspec(with_layers=True)
+    rep = P()
+    f = shard_map(
+        body, mesh=layout.mesh,
+        in_specs=(rep, rep, rep, spec, spec, rep, rep, rep, rep),
+        out_specs=(rep, spec, spec),
+        check_vma=False)
+    return jax.jit(f)

@@ -10,6 +10,17 @@ tiles so the MXU sees aligned [page, D] operands; G query heads of a KV
 head are processed together as a [G, D] tile.
 
 Grid: (B, Hkv, pages_per_seq) — pages innermost, accumulator in VMEM.
+
+The kernel also runs as one *shard* of a tensor-sharded page store
+(DESIGN.md §9): when the 'model' mesh axis splits each page's token
+slots, a shard holds ``page_local = page / M`` slots of every physical
+page, and ``pos_stride``/``pos_offset`` map local slot ``j`` of grid
+page ``p`` back to its global position ``p * pos_stride + pos_offset +
+j`` so the causal/length mask stays exact. ``return_stats`` additionally
+emits the online-softmax running max ``m`` and denominator ``l`` per
+(batch, q-head) so the caller can combine partial softmaxes across
+shards (the standard flash-merge: weight each shard's normalized output
+by ``l_s * exp(m_s - max_s m_s)``).
 """
 from __future__ import annotations
 
@@ -24,9 +35,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, page: int, pages_per_seq: int,
-            scale: float):
+def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, *refs,
+            page: int, pages_per_seq: int, scale: float,
+            pos_stride: int, pos_offset: int, stats: bool):
+    if stats:
+        o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        o_ref, acc_ref, m_ref, l_ref = refs
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -37,7 +52,7 @@ def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     seq_len = seq_lens[b]
-    base = p * page
+    base = p * pos_stride + pos_offset
 
     @pl.when(base < seq_len)
     def _compute():
@@ -59,21 +74,47 @@ def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, o_ref,
     def _finalize():
         denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        if stats:
+            m_out_ref[0, 0] = m_ref[...]
+            l_out_ref[0, 0] = l_ref[...]
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
-                    interpret: bool = False):
+                    pos_stride: int | None = None, pos_offset: int = 0,
+                    return_stats: bool = False, interpret: bool = False):
     """q [B, Hq, D]; k_pages/v_pages [P, page, Hkv, D];
-    block_tables [B, pages_per_seq] i32; seq_lens [B] i32 -> [B, Hq, D]."""
+    block_tables [B, pages_per_seq] i32; seq_lens [B] i32 -> [B, Hq, D].
+
+    ``pos_stride``/``pos_offset`` map local page slot ``j`` of grid page
+    ``p`` to global position ``p * pos_stride + pos_offset + j`` — the
+    identity mapping by default; a slot-sharded caller passes the global
+    page size and its shard's slot offset. With ``return_stats`` the
+    result is ``(out, m, l)`` where ``m``/``l`` [B, Hq] f32 are the
+    per-row online-softmax running max and denominator over this call's
+    positions (``m = -inf``, ``l = 0`` for rows/shards with no valid
+    position), enabling an exact cross-shard softmax merge.
+    """
     B, Hq, D = q.shape
     num_pages, page, Hkv, _ = k_pages.shape
     G = Hq // Hkv
     pages_per_seq = block_tables.shape[1]
+    if pos_stride is None:
+        pos_stride = page
     grid = (B, Hkv, pages_per_seq)
     kernel = functools.partial(
         _kernel, page=page, pages_per_seq=pages_per_seq,
-        scale=1.0 / math.sqrt(D))
+        scale=1.0 / math.sqrt(D), pos_stride=pos_stride,
+        pos_offset=pos_offset, stats=return_stats)
     qg = q.reshape(B, Hkv, G, D)
+    out_specs = pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, p, bt, sl: (b, h, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype)
+    if return_stats:
+        stat_spec = pl.BlockSpec((1, 1, G),
+                                 lambda b, h, p, bt, sl: (b, h, 0))
+        stat_shape = jax.ShapeDtypeStruct((B, Hkv, G), jnp.float32)
+        out_specs = [out_specs, stat_spec, stat_spec]
+        out_shape = [out_shape, stat_shape, stat_shape]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -85,8 +126,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
             pl.BlockSpec((1, page, 1, D),
                          lambda b, h, p, bt, sl: (bt[b, p], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, p, bt, sl: (b, h, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((G, D), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
@@ -96,7 +136,10 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(block_tables, seq_lens, qg, k_pages, v_pages)
+    if return_stats:
+        o, m, l = out
+        return (o.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq))
     return out.reshape(B, Hq, D)

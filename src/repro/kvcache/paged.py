@@ -10,6 +10,16 @@ kernel via scalar prefetch. A DRAM tier holds offloaded page *contents*
 
 This is hardware-agnostic bookkeeping: the LiveServe policies decide
 *which* sessions' pages move; this module moves them.
+
+It is also *layout*-agnostic (DESIGN.md §9): when the device page store
+is tensor-sharded over a mesh's 'model' axis, physical page ids and the
+block tables built from them are unchanged — the sharded dims (KV heads
+or page slots) are never indexed here. ``offload_suffix``'s
+``kv_pages[phys]`` read gathers the full logical page across shards
+(``np.asarray`` on a sharded jax array), and ``reload``'s batched
+scatter writes it back through the same functional update, so the DRAM
+tier always stores whole logical pages and an engine can evict on one
+mesh and (after a checkpoint-style move) reload on another.
 """
 from __future__ import annotations
 

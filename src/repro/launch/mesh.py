@@ -20,6 +20,26 @@ def make_debug_mesh(data: int = 2, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_serving_mesh(spec: str):
+    """Parse a ``DxM`` string (``--mesh 1x8``) into a ('data','model')
+    mesh for the paged serving plane. Raises ValueError with the
+    available device count when the shape doesn't fit — on a CPU host,
+    run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except (TypeError, ValueError):
+        raise ValueError(f"--mesh wants DxM (e.g. 1x8), got {spec!r}")
+    if d < 1 or m < 1:
+        raise ValueError(f"--mesh dims must be >= 1, got {d}x{m}")
+    n = len(jax.devices())
+    if d * m > n:
+        raise ValueError(
+            f"mesh {d}x{m} needs {d * m} devices but only {n} present; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{d * m} for a virtual host mesh")
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
 def data_axes(mesh) -> tuple:
     """Every non-'model' axis is a data/batch axis ('pod' included)."""
     return tuple(n for n in mesh.axis_names if n != "model")

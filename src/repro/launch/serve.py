@@ -56,6 +56,12 @@ def main() -> None:
     ap.add_argument("--kv-gb", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
+    # --engine real | live (the paged data plane)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="real/live engines: shard the paged KV plane "
+                         "over a ('data','model') mesh, e.g. 1x8 "
+                         "(DESIGN.md §9). On CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     # --engine live only
     ap.add_argument("--clock-scale", type=float, default=None,
                     help="live engine: wall-clock speedup factor")
@@ -72,6 +78,16 @@ def main() -> None:
         if live_only:
             ap.error(f"{', '.join(live_only)} only apply to "
                      f"--engine live")
+    if args.engine == "sim" and args.mesh is not None:
+        ap.error("--mesh shards the real paged data plane; the simulator "
+                 "models costs, not placement (use --engine real|live)")
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_serving_mesh
+        try:
+            mesh = make_serving_mesh(args.mesh)
+        except ValueError as e:
+            ap.error(str(e))
     if args.engine != "sim" and args.model is not None:
         ap.error("--model only applies to --engine sim; live/real run "
                  "the reduced CPU-runnable config")
@@ -87,7 +103,7 @@ def main() -> None:
                 f"simulation)")
         from repro.serving.paged_engine import run_multiturn_demo
         out = run_multiturn_demo(
-            seed=args.seed,
+            seed=args.seed, mesh=mesh,
             log=(lambda *_a, **_k: None) if args.json else print)
         if args.json:
             print(json.dumps(out, indent=1, default=str))
@@ -120,7 +136,7 @@ def main() -> None:
             scale=(args.clock_scale
                    if args.clock_scale is not None else 4.0),
             slots=args.slots if args.slots is not None else 8,
-            num_pages=args.kv_pages,
+            num_pages=args.kv_pages, mesh=mesh,
             frontier_cap_s=3.0 if system == "liveserve" else None)
         s = m.summary()
         s["rounds"] = gw.rounds

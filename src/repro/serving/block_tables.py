@@ -6,6 +6,12 @@ a *fixed-size* decode batch — inactive rows point at a reserved scratch
 page so the batch shape (and therefore the compiled step function) never
 changes across rounds — plus the layer-stacked K/V page-store adapter the
 pool's DRAM tier moves page contents through.
+
+Tables are **replicated** across every mesh axis in the sharded data
+plane (DESIGN.md §9): they index the unsharded physical-page dim, so
+one table drives all shards; ``LayerStackedPages`` works unchanged on a
+sharded store because its reads gather (``np.asarray``) and its writes
+are functional updates whose placement the engine re-commits.
 """
 from __future__ import annotations
 

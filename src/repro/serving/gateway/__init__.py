@@ -11,6 +11,8 @@ Layout:
               serving/workload.py traces in scaled real time
   harness.py  one-call end-to-end runner (serve.py --engine live,
               benchmarks/gateway_bench.py, tests, examples)
+  replay.py   deterministic virtual-time replay twin of gateway.py —
+              the differential sim-vs-real harness (DESIGN.md §9)
 """
 from repro.serving.gateway.clock import ScaledWallClock
 from repro.serving.gateway.events import (AudioChunk, BargeIn, Hangup,
@@ -20,10 +22,13 @@ from repro.serving.gateway.events import (AudioChunk, BargeIn, Hangup,
 from repro.serving.gateway.gateway import GatewayConfig, RealtimeGateway
 from repro.serving.gateway.client import LoadGenConfig, run_load
 from repro.serving.gateway.harness import run_gateway_workload
+from repro.serving.gateway.replay import (ReplayClock, ReplayConfig,
+                                          ReplayGateway, run_replay)
 
 __all__ = [
     "AudioChunk", "BargeIn", "Hangup", "SessionClosed", "SpeechEnd",
     "SpeechStart", "TurnDone", "TurnRequest", "UserAudio",
     "GatewayConfig", "RealtimeGateway", "ScaledWallClock",
     "LoadGenConfig", "run_load", "run_gateway_workload",
+    "ReplayClock", "ReplayConfig", "ReplayGateway", "run_replay",
 ]

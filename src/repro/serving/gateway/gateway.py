@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.scheduler import (FCFSScheduler, RoundBudget,
                                   SchedulerConfig, UrgencyScheduler)
 from repro.core.session import Phase, Request, RequestState
+from repro.kvcache.paged import OutOfPages
 from repro.serving.gateway.clock import ScaledWallClock
 from repro.serving.gateway.events import (AudioChunk, BargeIn, Hangup,
                                           SessionClosed, SessionEvent,
@@ -91,6 +92,75 @@ class SessionHandle:
 
     async def recv(self) -> SessionEvent:
         return await self._gs.outbox.get()
+
+
+def control_round(eng, scheduler, pending, *, token_budget: int,
+                  frontier_cap_s: Optional[float], record_admit):
+    """One Algorithm-1 control round over a paged engine — the single
+    source of truth shared by the asyncio ``RealtimeGateway`` and the
+    deterministic ``ReplayGateway`` (gateway/replay.py), so the replay
+    twin used by the differential harness cannot drift from the real
+    serving loop. Builds the candidate set (live slots minus decode
+    slots past the frontier cap, plus queued turns), asks the scheduler
+    for the round's admission, binds admitted pending turns to slots
+    (requeueing on a saturated-pool ``OutOfPages``), and returns
+    ``(decision, chunks, admitted)``; ``decision`` is None when nothing
+    was ready. ``record_admit(sid, request)`` fires per admitted turn.
+    """
+    now = eng.clock.now()
+    ready: List[Request] = []
+    owner: Dict[int, tuple] = {}
+
+    def over_frontier(sid: str) -> bool:
+        if frontier_cap_s is None:
+            return False
+        buf = eng.monitor.playback_buffer_s(sid)
+        return buf is not None and buf > frontier_cap_s
+
+    for i, s in eng.slot_state.items():
+        if s is None or not s.request.is_live():
+            continue
+        if s.request.generated >= s.request.max_new_tokens:
+            continue
+        if s.request.phase == Phase.DECODE \
+                and over_frontier(s.session_id):
+            continue                         # hard frontier cap (§4)
+        ready.append(s.request)
+        owner[s.request.req_id] = ("slot", i)
+    for sid, p in pending.items():
+        ready.append(p.request)
+        owner[p.request.req_id] = ("pending", sid)
+    if not ready:
+        return None, {}, False
+    budget = RoundBudget(
+        token_budget=token_budget,
+        free_kv_blocks=eng.kv.free_blocks
+        + eng.kv.reclaimable_blocks(now),
+        max_batch=eng.slots, block_size=eng.page_size)
+    decision = scheduler.schedule(ready, budget, now)
+    chunks: Dict[int, int] = {}
+    admitted = False
+    for r in decision.batch:
+        kind, key = owner[r.req_id]
+        if kind == "slot":
+            chunks[key] = decision.chunks[r.req_id]
+            continue
+        if eng.free_slot() is None:
+            continue                         # all slots busy; stay queued
+        p = pending.pop(key)
+        try:
+            eng.submit_turn(key, p.prompt, p.max_new_tokens,
+                            request=r)       # reload path runs here
+        except OutOfPages:
+            # saturated pool: the session's offloaded pages cannot be
+            # reloaded yet (everything else pinned/protected). Keep the
+            # turn queued — pressure drains as turns finish or barge-ins
+            # trim
+            pending[key] = p
+            continue
+        record_admit(key, r)
+        admitted = True                      # prefill starts next round
+    return decision, chunks, admitted
 
 
 class RealtimeGateway:
@@ -249,55 +319,20 @@ class RealtimeGateway:
         gs.outbox.put_nowait(SessionClosed(sid, t=self.clock.now()))
 
     # ------------------------------------------------------------ rounds
-    def _over_frontier(self, sid: str) -> bool:
-        cap = self.cfg.frontier_cap_s
-        if cap is None:
-            return False
-        buf = self.engine.monitor.playback_buffer_s(sid)
-        return buf is not None and buf > cap
+    def _record_admit(self, sid: str, r: Request) -> None:
+        self._rec(sid).reload_stall_s = r.reload_stall_s
 
     def _round(self) -> bool:
         """One scheduler-driven round. Returns True if any work ran."""
         eng = self.engine
-        now = self.clock.now()
-        ready: List[Request] = []
-        owner: Dict[int, tuple] = {}
-        for i, s in eng.slot_state.items():
-            if s is None or not s.request.is_live():
-                continue
-            if s.request.generated >= s.request.max_new_tokens:
-                continue
-            if s.request.phase == Phase.DECODE \
-                    and self._over_frontier(s.session_id):
-                continue                     # hard frontier cap (§4)
-            ready.append(s.request)
-            owner[s.request.req_id] = ("slot", i)
-        for sid, p in self._pending.items():
-            ready.append(p.request)
-            owner[p.request.req_id] = ("pending", sid)
-        if not ready:
-            return False
-        budget = RoundBudget(
+        decision, chunks, admitted = control_round(
+            eng, self.scheduler, self._pending,
             token_budget=self.cfg.round_token_budget,
-            free_kv_blocks=eng.kv.free_blocks
-            + eng.kv.reclaimable_blocks(now),
-            max_batch=eng.slots, block_size=eng.page_size)
-        decision = self.scheduler.schedule(ready, budget, now)
+            frontier_cap_s=self.cfg.frontier_cap_s,
+            record_admit=self._record_admit)
+        if decision is None:
+            return False
         self.last_decision = decision
-        chunks: Dict[int, int] = {}
-        admitted = False
-        for r in decision.batch:
-            kind, key = owner[r.req_id]
-            if kind == "slot":
-                chunks[key] = decision.chunks[r.req_id]
-                continue
-            if eng.free_slot() is None:
-                continue                     # all slots busy; stay queued
-            p = self._pending.pop(key)
-            eng.submit_turn(key, p.prompt, p.max_new_tokens,
-                            request=r)       # reload path runs here
-            self._rec(key).reload_stall_s = r.reload_stall_s
-            admitted = True                  # prefill starts next round
         if not chunks:
             return admitted
         sids = {i: eng.slot_state[i].session_id for i in chunks}

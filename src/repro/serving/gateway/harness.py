@@ -57,14 +57,20 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                   frontier_cap_s: Optional[float] = None,
                   sched_cfg: Optional[SchedulerConfig] = None,
                   model: Optional[tuple] = None,
-                  seed: int = 0) -> RealtimeGateway:
+                  mesh=None, seed: int = 0) -> RealtimeGateway:
+    """``mesh``: a ('data','model') jax mesh shards the engine's page
+    store over 'model' (DESIGN.md §9) — on a laptop run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
+    virtual host-platform mesh; everything above the engine is
+    mesh-agnostic."""
     from repro.serving.paged_engine import PagedRealtimeEngine
     cfg, params = model if model is not None else tiny_model(seed)
     clock = ScaledWallClock(scale)
     eng = PagedRealtimeEngine(cfg, params, slots=slots,
                               page_size=page_size,
                               pages_per_seq=pages_per_seq,
-                              num_pages=num_pages, clock=clock)
+                              num_pages=num_pages, clock=clock,
+                              mesh=mesh)
     _warm_engine(eng)
     gw = RealtimeGateway(eng, cfg=GatewayConfig(
         policy=policy, audio_per_token_s=audio_per_token_s,

@@ -1,0 +1,361 @@
+"""Deterministic virtual-time gateway replay (DESIGN.md §4, §9).
+
+The asyncio ``RealtimeGateway`` runs the control plane against a scaled
+*wall* clock — great for end-to-end realism, useless for property-based
+differential testing, where an example must be bit-reproducible and
+fast. This module replays the same ``serving/workload.py`` traces
+through the same ``PagedRealtimeEngine`` round API
+(``submit_turn``/``run_round``/``barge_in``/``end_session``) and the
+same ``core/scheduler.py`` Algorithm 1, but on a virtual clock the
+driver owns: rounds cost a fixed ``round_dt`` of virtual seconds, idle
+time jumps straight to the next client event, and the client state
+machine (speak → turn request → listen → barge/think → speak) is the
+synchronous mirror of ``gateway/client.py``.
+
+Scheduling-visible behavior — which turns complete in which order,
+what the playback-frontier cap holds, which sessions the KV policy
+evicts — is therefore a pure function of (workload seed, engine
+geometry), directly comparable against ``serving/simulator.py`` on the
+same trace. That comparison is the differential harness in
+``tests/test_differential.py``.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import (FCFSScheduler, SchedulerConfig,
+                                  UrgencyScheduler)
+from repro.core.session import Request, RequestState
+from repro.serving.engine import RoundLimitExceeded
+from repro.serving.gateway.gateway import control_round
+from repro.serving.metrics import Metrics, TurnRecord
+from repro.serving.workload import WorkloadConfig, generate
+
+
+class ReplayClock:
+    """Driver-owned virtual time. The engine's per-round ``tick()`` is
+    free; the driver charges ``round_dt`` per executed round and jumps
+    over idle gaps."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def tick(self, dt: float = 0.0) -> None:
+        self.t += dt
+
+    def advance_to(self, t: float) -> None:
+        self.t = max(self.t, t)
+
+
+@dataclass
+class ReplayConfig:
+    policy: str = "liveserve"            # liveserve | fcfs
+    audio_per_token_s: float = 0.25
+    round_token_budget: int = 4
+    prefill_chunk: int = 2
+    frontier_cap_s: Optional[float] = 3.0
+    round_dt: float = 0.02               # virtual cost of one round
+    max_turns: int = 2                   # trace clamps (as client.py)
+    max_prompt: int = 6
+    max_response: int = 6
+    sched: Optional[SchedulerConfig] = None
+
+
+@dataclass
+class _Pending:
+    session_id: str
+    prompt: np.ndarray
+    max_new_tokens: int
+    request: Request
+
+
+class ReplayGateway:
+    """Synchronous, virtually-clocked twin of ``RealtimeGateway``."""
+
+    def __init__(self, engine, workload: WorkloadConfig,
+                 cfg: Optional[ReplayConfig] = None, *, seed: int = 0):
+        self.eng = engine
+        self.cfg = cfg or ReplayConfig()
+        self.clock = engine.clock
+        assert isinstance(self.clock, ReplayClock), \
+            "build the engine on a ReplayClock (driver owns time)"
+        sc = self.cfg.sched or SchedulerConfig()
+        chunk = max(1, min(self.cfg.prefill_chunk,
+                           self.cfg.round_token_budget))
+        if self.cfg.policy == "liveserve":
+            self.scheduler = UrgencyScheduler(
+                sc, engine.monitor, stage="thinker",
+                kv_occupancy=engine.kv.occupancy, prefill_chunk=chunk)
+        else:
+            self.scheduler = FCFSScheduler(
+                engine.monitor, stage="thinker", prefill_chunk=chunk)
+        self.metrics = Metrics()
+        self._recs: Dict[Tuple[str, int], TurnRecord] = {}
+        self._pending: Dict[str, _Pending] = {}
+        self._turn_no: Dict[str, int] = {}
+        self._events: List[tuple] = []       # (t, seq, fn)
+        self._seq = itertools.count()
+        self.rounds = 0
+        self.max_over_frontier_s = 0.0
+        self._admit_trace(workload, seed)
+
+    # ------------------------------------------------------------ trace
+    def _admit_trace(self, workload: WorkloadConfig, seed: int) -> None:
+        """Clamp the trace exactly like ``gateway/client.py`` (one rng
+        draw per turn, stream keyed [seed, session-index]) so the same
+        (workload, seed) yields identical prompts here and in the
+        asyncio gateway. All draws happen up front: replay scheduling
+        order can never perturb them."""
+        self._trace = generate(workload)
+        self._by_sid = {s.session_id: s for s in self._trace}
+        self._turns: Dict[str, list] = {}
+        for i, s in enumerate(self._trace):
+            rng = np.random.default_rng([seed, i])
+            lst = []
+            for turn in s.turns[:self.cfg.max_turns]:
+                prompt = rng.integers(
+                    0, self.eng.cfg.vocab_size,
+                    size=max(1, min(turn.prompt_len, self.cfg.max_prompt)))
+                n_tokens = max(2, min(turn.response_tokens,
+                                      self.cfg.max_response))
+                speech_dur = max(0.05, turn.speech_end - turn.speech_start)
+                cut_s = None
+                if turn.barge_in:
+                    apt = self.cfg.audio_per_token_s
+                    frac = turn.barge_cut_s / max(
+                        1e-9, turn.response_tokens * apt)
+                    cut_s = max(apt, min(frac, 0.9) * n_tokens * apt)
+                lst.append((np.asarray(prompt, np.int32), n_tokens,
+                            speech_dur, cut_s))
+            self._turns[s.session_id] = lst
+            self._push(s.arrival_time, self._speech_start, s, 0)
+
+    def _push(self, t: float, fn, *args) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), fn, args))
+
+    def _rec(self, sid: str) -> TurnRecord:
+        key = (sid, self._turn_no[sid])
+        rec = self._recs.get(key)
+        if rec is None:
+            rec = TurnRecord(session_id=sid, turn_index=key[1])
+            self._recs[key] = rec
+            self.metrics.turns.append(rec)
+        return rec
+
+    # ----------------------------------------------------- client events
+    def _clamped_turn(self, s, ti: int):
+        return self._turns[s.session_id][ti]
+
+    def _speech_start(self, s, ti: int) -> None:
+        sid = s.session_id
+        _, _, speech_dur, _ = self._clamped_turn(s, ti)
+        self.eng.user_speech_start(sid, expected_dur_s=speech_dur)
+        self._push(self.clock.now() + speech_dur, self._turn_request,
+                   s, ti)
+
+    def _turn_request(self, s, ti: int) -> None:
+        sid = s.session_id
+        prompt, n_tokens, _, _ = self._clamped_turn(s, ti)
+        self.eng.monitor.on_speech_end(sid)
+        self._turn_no[sid] = ti
+        now = self.clock.now()
+        sess = self.eng.sessions.get(sid)
+        req = Request(session_id=sid, stage="thinker", turn_index=ti,
+                      arrival_time=now, prompt_len=int(len(prompt)),
+                      context_len=sess.kv_len if sess else 0,
+                      max_new_tokens=n_tokens,
+                      audio_per_token_s=self.cfg.audio_per_token_s)
+        self._pending[sid] = _Pending(sid, np.asarray(prompt, np.int32),
+                                      n_tokens, req)
+        self._rec(sid).speech_end = now
+
+    def _barge(self, s, ti: int) -> None:
+        """The trace's cut point (anchored post-TTFP, like client.py):
+        interrupt playback, then the interrupting utterance becomes the
+        next turn immediately."""
+        sid = s.session_id
+        eng = self.eng
+        now = self.clock.now()
+        rec = self._recs.get((sid, ti))
+        view = eng.monitor.view(sid)
+        slot = self._slot_of(sid)
+        drained = rec is not None and rec.completed and (
+            view is None or view.playback.buffer_s(now) <= 0)
+        if not (drained and slot is None and sid not in self._pending):
+            pend = self._pending.pop(sid, None)
+            if pend is not None:
+                pend.request.state = RequestState.ABORTED
+            if rec is not None and not drained:
+                rec.barged = True
+                heard = view.playback.consumed_s(now) if view else 0.0
+                rec.audio_heard_s = heard
+                heard_tokens = int(heard / self.cfg.audio_per_token_s)
+                rec.talker_wasted = max(0, rec.talker_generated
+                                        - heard_tokens)
+                rec.finish_time = now
+            nturns = self._turns[sid]
+            speech_dur = (nturns[ti + 1][2] if ti + 1 < len(nturns)
+                          else None)
+            eng.barge_in(sid, expected_dur_s=speech_dur)
+            if slot is None:
+                eng.monitor.on_barge_in(sid)
+        self._next_or_hangup(s, ti, at=now)
+
+    def _turn_done(self, s, ti: int) -> None:
+        sid = s.session_id
+        now = self.clock.now()
+        v = self.eng.monitor.view(sid)
+        drain = v.playback.buffer_s(now) if v else 0.0
+        self._next_or_hangup(s, ti,
+                             at=now + drain + (s.think_time_s or 0.0))
+
+    def _next_or_hangup(self, s, ti: int, *, at: float) -> None:
+        nxt = ti + 1
+        if nxt < len(self._turns[s.session_id]):
+            self._push(at, self._speech_start, s, nxt)
+        else:
+            self._push(at, self._hangup, s)
+
+    def _hangup(self, s) -> None:
+        sid = s.session_id
+        if self._slot_of(sid) is not None:
+            self.eng.abort(sid)
+        self._pending.pop(sid, None)
+        if sid in self.eng.sessions and not self.eng.sessions[sid].ended:
+            self.eng.end_session(sid)
+        self.metrics.completed_sessions += 1
+
+    def _slot_of(self, sid: str) -> Optional[int]:
+        for i, st in self.eng.slot_state.items():
+            if st is not None and st.session_id == sid:
+                return i
+        return None
+
+    # ------------------------------------------------------------ rounds
+    def _round(self) -> bool:
+        """One scheduler round: the shared ``control_round`` body (the
+        very same code the asyncio gateway runs — candidate set,
+        frontier cap, OutOfPages requeue), executed synchronously."""
+        eng = self.eng
+        decision, chunks, admitted = control_round(
+            eng, self.scheduler, self._pending,
+            token_budget=self.cfg.round_token_budget,
+            frontier_cap_s=self.cfg.frontier_cap_s,
+            record_admit=lambda sid, r: setattr(
+                self._rec(sid), "reload_stall_s", r.reload_stall_s))
+        if decision is None:
+            return False
+        if not chunks:
+            return admitted
+        sids = {i: eng.slot_state[i].session_id for i in chunks}
+        events = eng.run_round(chunks)
+        self.rounds += 1
+        self._dispatch(events, sids)
+        return True
+
+    def _dispatch(self, events: Dict[int, List[tuple]],
+                  sids: Dict[int, str]) -> None:
+        eng = self.eng
+        apt = self.cfg.audio_per_token_s
+        for slot, evs in events.items():
+            sid = sids[slot]
+            s = self._by_sid[sid]
+            ti = self._turn_no[sid]
+            rec = self._rec(sid)
+            for kind, val in evs:
+                now = self.clock.now()
+                if kind == "token":
+                    first = rec.ttfp is None
+                    if first:
+                        rec.ttfp = now - rec.speech_end
+                        rec.text_ttft = rec.ttfp
+                    eng.monitor.on_audio(sid, apt)
+                    rec.audio_delivered_s += apt
+                    rec.talker_generated += 1
+                    if self.cfg.frontier_cap_s is not None:
+                        buf = eng.monitor.playback_buffer_s(sid) or 0.0
+                        self.max_over_frontier_s = max(
+                            self.max_over_frontier_s,
+                            buf - self.cfg.frontier_cap_s)
+                    if first:
+                        # the trace's barge cut anchors at first audio
+                        _, _, _, cut_s = self._clamped_turn(s, ti)
+                        if cut_s is not None:
+                            self._push(now + cut_s, self._barge, s, ti)
+                elif kind == "finished":
+                    v = eng.monitor.view(sid)
+                    rec.max_gap_s = (v.playback.max_gap_s
+                                     if v.playback.gap_s else 0.0)
+                    rec.n_gaps = v.playback.n_gaps
+                    rec.gen_span_s = now - rec.speech_end \
+                        - (rec.ttfp or 0.0)
+                    rec.completed = True
+                    rec.finish_time = now
+                    _, _, _, cut_s = self._clamped_turn(s, ti)
+                    if cut_s is None:
+                        self._turn_done(s, ti)
+                    # else: the scheduled barge advances the session
+
+    # ------------------------------------------------------------ run
+    def _live_work(self) -> bool:
+        if self._pending:
+            return True
+        return any(st is not None and st.request.is_live()
+                   and st.request.generated < st.request.max_new_tokens
+                   for st in self.eng.slot_state.values())
+
+    def run(self, *, max_rounds: int = 200_000,
+            check_every_round=None) -> Metrics:
+        """Drive the full trace to completion. ``check_every_round``
+        (e.g. ``engine.check_invariants``) runs after every executed
+        round. Raises ``RoundLimitExceeded`` — never swallows it — if
+        the schedule live-locks."""
+        idle = 0
+        while self._events or self._live_work():
+            while self._events and self._events[0][0] <= self.clock.now():
+                _, _, fn, args = heapq.heappop(self._events)
+                fn(*args)
+            if self._round():
+                self.clock.tick(self.cfg.round_dt)
+                idle = 0
+                if check_every_round is not None:
+                    check_every_round()
+                if self.rounds > max_rounds:
+                    raise RoundLimitExceeded(
+                        f"replay still live after {max_rounds} rounds")
+                continue
+            if self._events:
+                self.clock.advance_to(self._events[0][0])
+                continue
+            if self._live_work():
+                # paced/held work with no client events: playback must
+                # drain (or pressure lift) before anything schedules
+                self.clock.tick(max(self.cfg.round_dt, 0.05))
+                idle += 1
+                if idle > max_rounds:
+                    raise RoundLimitExceeded(
+                        "replay wedged: live work that never reschedules")
+                continue
+        self.metrics.sim_end = self.clock.now()
+        return self.metrics
+
+
+def run_replay(engine_factory, workload: WorkloadConfig,
+               cfg: Optional[ReplayConfig] = None, *, seed: int = 0,
+               check_invariants: bool = True):
+    """Build engine on a ReplayClock via ``engine_factory(clock)``,
+    replay the workload, return (metrics, ReplayGateway)."""
+    clock = ReplayClock()
+    eng = engine_factory(clock)
+    gw = ReplayGateway(eng, workload, cfg, seed=seed)
+    gw.run(check_every_round=eng.check_invariants
+           if check_invariants else None)
+    return gw.metrics, gw

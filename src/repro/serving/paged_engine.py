@@ -66,13 +66,19 @@ from repro.serving.engine import RoundLimitExceeded, _StepClock, \
 # ======================================================================
 def paged_decode_step(cfg, params, tokens, positions, k_pages, v_pages,
                       block_tables, seq_lens, write_page, write_slot,
-                      *, interpret: bool = False):
+                      *, interpret: bool = False, plane=None):
     """One token per batch row through the paged KV store.
 
     tokens/positions/write_page/write_slot [B] i32;
     k_pages/v_pages [L, P+1, page, Hkv, hd]; block_tables [B, pps] i32;
     seq_lens [B] i32 (post-write attention lengths).
     Returns (logits [B, V], k_pages, v_pages).
+
+    ``plane`` swaps the page write + attention strategy: None is the
+    single-device path; a ``distributed.paged.PagedKVLayout`` makes this
+    the per-shard body of a shard_map over the 'model' axis (local page
+    shards, replicated everything else — DESIGN.md §9). Same code path
+    either way, so sharded and unsharded engines cannot drift.
     """
     x = _embed(cfg, params, tokens[:, None])
     pos = positions[:, None]                            # [B, 1]
@@ -81,10 +87,16 @@ def paged_decode_step(cfg, params, tokens, positions, k_pages, v_pages,
         lp, kc, vc = xs
         h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
         q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, pos)
-        kc = kc.at[write_page, write_slot].set(k[:, 0])
-        vc = vc.at[write_page, write_slot].set(v[:, 0])
-        a = paged_attention(q[:, 0], kc, vc, block_tables, seq_lens,
-                            interpret=interpret)
+        if plane is None:
+            kc = kc.at[write_page, write_slot].set(k[:, 0])
+            vc = vc.at[write_page, write_slot].set(v[:, 0])
+            a = paged_attention(q[:, 0], kc, vc, block_tables, seq_lens,
+                                interpret=interpret)
+        else:
+            kc, vc = plane.write_token(kc, vc, k[:, 0], v[:, 0],
+                                       write_page, write_slot)
+            a = plane.attend(q[:, 0], kc, vc, block_tables, seq_lens,
+                             interpret=interpret)
         h = carry + L.attn_output(lp["attn"], a[:, None])
         h, _ = _mlp_block(cfg, lp, h, None)
         return h, (kc, vc)
@@ -101,23 +113,30 @@ def paged_decode_step(cfg, params, tokens, positions, k_pages, v_pages,
     return _logits(cfg, params, x)[:, 0], k_pages, v_pages
 
 
-# one jitted step per (config, interpret) shared across engine instances
-# — a policy-comparison harness (gateway liveserve vs fcfs on the same
-# model) pays the XLA compile once, not per engine. Values retain cfg so
-# the id() key can never be recycled; the cache is LRU-bounded so a
-# long-lived process churning through configs doesn't pin every compiled
-# executable forever (engines keep their own _step_fn reference, so
-# eviction only forfeits future sharing).
+# one jitted step per (config, interpret, mesh layout) shared across
+# engine instances — a policy-comparison harness (gateway liveserve vs
+# fcfs on the same model) pays the XLA compile once, not per engine.
+# Values retain cfg so the id() key can never be recycled; the cache is
+# LRU-bounded so a long-lived process churning through configs doesn't
+# pin every compiled executable forever (engines keep their own _step_fn
+# reference, so eviction only forfeits future sharing).
 _STEP_FN_CACHE: Dict[tuple, tuple] = {}
 _STEP_FN_CACHE_MAX = 8
 
 
-def _jitted_step(cfg, interpret: bool):
-    key = (id(cfg), interpret)
+def _jitted_step(cfg, interpret: bool, layout=None):
+    lkey = None if layout is None else (layout.mesh, layout.kind,
+                                        layout.page_size)
+    key = (id(cfg), interpret, lkey)
     hit = _STEP_FN_CACHE.pop(key, None)
     if hit is None:
-        hit = (cfg, jax.jit(functools.partial(paged_decode_step, cfg,
-                                              interpret=interpret)))
+        if layout is None:
+            fn = jax.jit(functools.partial(paged_decode_step, cfg,
+                                           interpret=interpret))
+        else:
+            from repro.distributed.paged import make_sharded_step
+            fn = make_sharded_step(cfg, layout, interpret=interpret)
+        hit = (cfg, fn)
     _STEP_FN_CACHE[key] = hit                  # re-insert: LRU order
     while len(_STEP_FN_CACHE) > _STEP_FN_CACHE_MAX:
         _STEP_FN_CACHE.pop(next(iter(_STEP_FN_CACHE)))
@@ -159,7 +178,7 @@ class PagedRealtimeEngine:
                  clock=None, scheduler: Optional[UrgencyScheduler] = None,
                  kv: Optional[KVManager] = None, kv_policy: str = "next_use",
                  pcie_gb_s: float = 25.0, preload: bool = True,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, mesh=None):
         assert cfg.family in ("dense", "moe", "vlm") and cfg.mla is None \
             and cfg.sliding_window is None, \
             "paged engine serves global-attention KV families"
@@ -167,7 +186,6 @@ class PagedRealtimeEngine:
             "the physical data plane needs an offload tier ('none' " \
             "discards pages; use the simulator for that baseline)"
         self.cfg = cfg
-        self.params = params
         self.slots = slots
         self.page_size = page_size
         self.pages_per_seq = pages_per_seq
@@ -178,12 +196,25 @@ class PagedRealtimeEngine:
         self.monitor = RuntimeMonitor(self.clock)
         self.pool = PagedPool(self.num_pages, page_size)
 
+        # tensor-sharded page store (DESIGN.md §9): pages shard KV heads
+        # (or page slots) over the mesh's 'model' axis; weights, block
+        # tables, and the decode batch stay replicated, so every host-
+        # side policy/pool path below is mesh-agnostic.
+        self.mesh = mesh
+        self.layout = None
+        if mesh is not None:
+            from repro.distributed.paged import PagedKVLayout
+            self.layout = PagedKVLayout(cfg, mesh, page_size)
+            params = jax.device_put(params, self.layout.replicated)
+        self.params = params
+
         hd = cfg.resolved_head_dim
         dtype = jnp.dtype(cfg.dtype)
         shape = (cfg.num_layers, self.num_pages + 1, page_size,
                  cfg.num_kv_heads, hd)
         self.k_pages = jnp.zeros(shape, dtype)
         self.v_pages = jnp.zeros(shape, dtype)
+        self._place_pages()
         bytes_per_token = 2 * cfg.num_layers * cfg.num_kv_heads * hd \
             * dtype.itemsize
         self.kv = kv or KVManager(
@@ -206,17 +237,35 @@ class PagedRealtimeEngine:
             i: None for i in range(slots)}
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        self._step_fn = _jitted_step(cfg, interpret)
+        self._step_fn = _jitted_step(cfg, interpret, self.layout)
         # telemetry
         self.reload_wall_s: List[float] = []   # measured host->device time
         self.offload_events: List[tuple] = []
+        self.pressure_holds = 0                # feeds held mid-round
 
     # ------------------------------------------------------------ pages
+    def _place_pages(self) -> None:
+        """Re-commit the page store to its mesh sharding. Host-driven
+        page updates (DRAM reload scatter, dense-prefill graft) run
+        outside the jitted step and may leave the result on inferred
+        shardings; the jitted shard_map expects the layout's exact
+        placement, so re-place after every such update (a no-op copy
+        when the sharding already matches, and always a no-op without a
+        mesh)."""
+        if self.layout is not None:
+            sh = self.layout.page_sharding()
+            self.k_pages = jax.device_put(self.k_pages, sh)
+            self.v_pages = jax.device_put(self.v_pages, sh)
+
     def _sync_page_counts(self, sid: str) -> None:
-        s = self.pool.seq(sid)
-        self.monitor.on_page_movement(
-            sid, resident=self.pool.resident_pages(sid),
-            offloaded=len(s.offloaded))
+        # read-only bounds: a session released from the pool (hangup) or
+        # never admitted must report 0/0, not have `pool.seq` re-create a
+        # ghost entry for it (check_invariants iterates pool.seqs)
+        s = self.pool.seqs.get(sid)
+        resident = sum(1 for p in s.pages if p >= 0) if s else 0
+        offloaded = len(s.offloaded) if s else 0
+        self.monitor.on_page_movement(sid, resident=resident,
+                                      offloaded=offloaded)
 
     def _offload_pages(self, sid: str, blocks: int) -> None:
         """KVManager eviction hook: physically move suffix pages to DRAM."""
@@ -233,6 +282,7 @@ class PagedRealtimeEngine:
         store, loaded = self.pool.reload(
             sid, LayerStackedPages(self.k_pages, self.v_pages))
         self.k_pages, self.v_pages = store.k, store.v
+        self._place_pages()
         jax.block_until_ready(self.k_pages)
         self.reload_wall_s.append(time.perf_counter() - t0)
         assert loaded == blocks, \
@@ -328,6 +378,21 @@ class PagedRealtimeEngine:
     def _prep_next_turn(self, session_id: str) -> PagedSession:
         sess = self.sessions[session_id]
         assert not sess.ended, f"{session_id} ended; KV pages are gone"
+        # reload FIRST, before any turn bookkeeping mutates: on a
+        # saturated pool (every other session pinned or speech-protected)
+        # the sync-fallback reload can fail to fit, and that must surface
+        # as recoverable pressure the control plane can retry — not as a
+        # half-started turn. Pin before the reload path: its eviction
+        # pass must never pick the session being brought back as its own
+        # victim.
+        self.kv.pin(session_id)
+        stall = self.preloader.on_turn_ready(session_id, self.clock.now())
+        if self.pool.seq(session_id).offloaded:
+            self.kv.session(session_id).pinned = False
+            raise OutOfPages(
+                f"{session_id}: pool too saturated to reload "
+                f"{len(self.pool.seq(session_id).offloaded)} offloaded "
+                "pages; keep the turn queued and retry")
         sess.turn_index += 1
         # the utterance is over once its turn reaches the LLM stage —
         # clear `speaking` or the session stays immediate_reuse forever
@@ -335,12 +400,6 @@ class PagedRealtimeEngine:
         self.monitor.on_speech_end(session_id)
         self.monitor.on_turn_start(session_id, sess.turn_index)
         sess.turn_arrival = self.clock.now()
-        # pin before the reload path: its eviction pass must never pick
-        # the session being brought back as its own victim
-        self.kv.pin(session_id)
-        stall = self.preloader.on_turn_ready(session_id, self.clock.now())
-        assert not self.pool.seq(session_id).offloaded, \
-            "turn started with offloaded pages — reload path broken"
         if stall > 0:
             self.clock.tick(stall)          # on-path sync reload residual
         sess.reload_stall_s = stall
@@ -416,6 +475,7 @@ class PagedRealtimeEngine:
         vl = c1["v"][:, 0].reshape(kl.shape)
         self.k_pages = self.k_pages.at[:, phys].set(kl)
         self.v_pages = self.v_pages.at[:, phys].set(vl)
+        self._place_pages()
         sess.kv_len = P
         self.clock.tick()
         return int(jnp.argmax(logits[0]))
@@ -532,16 +592,30 @@ class PagedRealtimeEngine:
                     feeds[i] = (s.session_id, s.pending_token)
             if not feeds:
                 break
-            for i in feeds:
+            for i in list(feeds):
                 s = self.slot_state[i]
                 sess = self.sessions[s.session_id]
-                self._grow(s.session_id, sess.kv_len + 1)
+                try:
+                    self._grow(s.session_id, sess.kv_len + 1)
+                except OutOfPages:
+                    # mid-chunk allocation failure: admission accounted
+                    # blocks that interaction events (speech protection,
+                    # a barge-in trim re-pinning pressure elsewhere)
+                    # made unreclaimable by the time this sub-batch
+                    # allocates. Hold the slot — it retries next round
+                    # when pressure drains; scheduling moves WHEN tokens
+                    # appear, never WHICH (§5.2), so holding is safe.
+                    del feeds[i]
+                    self.pressure_holds += 1
+                    continue
                 # best-effort lookahead: own the next page before the
                 # write that crosses into it, so the boundary token never
                 # waits on allocation/eviction (these are the in-flight
                 # pages a barge-in trims)
                 self._grow(s.session_id, sess.kv_len + 1 + self.page_size,
                            best_effort=True)
+            if not feeds:
+                continue                     # everything held this round
             out = self._run_rows(feeds)
             for i in feeds:
                 s = self.slot_state[i]
@@ -637,12 +711,19 @@ class PagedRealtimeEngine:
         assert len(owned) + self.pool.free_pages == self.num_pages
         assert self.kv.used_blocks == len(owned), \
             f"accounting {self.kv.used_blocks} != physical {len(owned)}"
+        if self.layout is not None:
+            sh = self.layout.page_sharding()
+            assert self.k_pages.sharding.is_equivalent_to(sh,
+                                                          self.k_pages.ndim) \
+                and self.v_pages.sharding.is_equivalent_to(sh,
+                                                           self.v_pages.ndim), \
+                "page store drifted off its mesh sharding"
 
 
 # ======================================================================
 # demo driver (launch/serve.py --engine real and examples/)
 # ======================================================================
-def run_multiturn_demo(*, seed: int = 0, log=print) -> dict:
+def run_multiturn_demo(*, seed: int = 0, mesh=None, log=print) -> dict:
     """A laptop-scale end-to-end conversation on the real data plane,
     walking the whole §5 mechanism:
 
@@ -670,13 +751,14 @@ def run_multiturn_demo(*, seed: int = 0, log=print) -> dict:
     # transfer times land in the milliseconds the paper plots
     eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=8,
                               pages_per_seq=9, num_pages=11,
-                              pcie_gb_s=0.01)
+                              pcie_gb_s=0.01, mesh=mesh)
     rng = np.random.default_rng(seed)
 
     def prompt(n):
         return rng.integers(0, cfg.vocab_size, size=n)
 
-    log(f"engine: {cfg.name} slots=2 page=8 pool={eng.num_pages} pages")
+    log(f"engine: {cfg.name} slots=2 page=8 pool={eng.num_pages} pages"
+        + (f" layout={eng.layout}" if eng.layout else ""))
     # ---- alice turn 1: admitted, decoded to completion -------------
     eng.add_session("alice", prompt(28), max_new_tokens=10)
     eng.run_to_completion()

@@ -1,0 +1,270 @@
+"""Differential sim-vs-real property harness (ISSUE 3 satellite).
+
+The same seeded workload trace is replayed through both planes:
+
+- **sim**  — ``serving/simulator.py``: the LiveServe control plane on a
+  virtual clock with cost-model stage timings;
+- **real** — ``PagedRealtimeEngine`` driven by the deterministic
+  virtual-time ``ReplayGateway`` (``gateway/replay.py``), running the
+  same Algorithm 1 scheduler, KV manager, and preloader over real paged
+  JAX state.
+
+Wall-clock latencies differ by construction; *scheduling-visible*
+invariants must not:
+
+- the shared metrics schema is identical (``summary()`` keys);
+- per-session turn completion order is the turn order, in both planes;
+- every turn either completes or is barged exactly as the trace says,
+  and only after producing first audio;
+- the playback-frontier cap is never exceeded by more than one token
+  of audio (chunk granularity);
+- every eviction victim agrees with the sim's next-use policy (Eq. 4):
+  victims' next-use estimates dominate every spared candidate's — the
+  oracle recomputes fresh estimates at decision time (``index_mode=
+  'scan'`` in both planes so the lazily-refreshed heap isn't part of
+  the contract under test).
+
+The hypothesis property runs when hypothesis is installed; a
+27-example deterministic sweep always runs, so the differential
+coverage never silently disappears with the optional dep.
+"""
+import jax
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving.costmodel import PIPELINES
+from repro.serving.gateway.replay import ReplayConfig, run_replay
+from repro.serving.metrics import Metrics
+from repro.serving.paged_engine import PagedRealtimeEngine
+from repro.serving.simulator import Simulation
+from repro.serving.workload import WorkloadConfig
+
+APT = 0.25               # audio seconds per output token (replay side)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                  vocab=331)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ======================================================================
+# the next-use eviction oracle
+# ======================================================================
+def install_eviction_oracle(kv):
+    """Wrap ``kv.evict`` so every eviction pass is checked against a
+    freshly-computed Eq. 4 ranking: each victim's next-use estimate must
+    dominate (>=, with fp slack) every candidate that was spared.
+    Returns the violations list (empty == policy agreement)."""
+    violations = []
+    orig_evict = kv.evict
+
+    def evict(need_blocks, now):
+        cands = {}
+        for sid, s in kv.sessions.items():
+            if s.evictable(now) <= 0:
+                continue
+            if kv.monitor is not None and kv.monitor.immediate_reuse(sid):
+                continue
+            cands[sid] = kv.next_use_estimate(sid, now)
+        victims = []
+        orig_es = kv._evict_session
+
+        def spy(sid, want, now2):
+            victims.append(sid)
+            return orig_es(sid, want, now2)
+
+        kv._evict_session = spy
+        try:
+            freed = orig_evict(need_blocks, now)
+        finally:
+            kv._evict_session = orig_es
+        vset = set(victims)
+        for v in vset:
+            if v not in cands:
+                violations.append(("illegal-victim", now, v, dict(cands)))
+        spared = [est for sid, est in cands.items() if sid not in vset]
+        if vset and spared:
+            lo = min(cands[v] for v in vset if v in cands)
+            if lo + 1e-9 < max(spared):
+                violations.append(("ranking", now, victims, dict(cands)))
+        return freed
+
+    kv.evict = evict
+    return violations
+
+
+# ======================================================================
+# the two planes
+# ======================================================================
+def _workload(seed, kind, sessions, barge):
+    return WorkloadConfig(kind=kind, num_sessions=sessions, seed=seed,
+                          p_barge_in=barge, arrival="poisson",
+                          rate_rps=4.0)
+
+
+def _run_real(tiny_model, wl, seed, *, num_pages=None):
+    cfg, params = tiny_model
+
+    def factory(clock):
+        eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                                  pages_per_seq=8, num_pages=num_pages,
+                                  clock=clock)
+        eng.kv.index_mode = "scan"      # fresh Eq. 4 ranking per pass
+        return eng
+
+    clockbox = {}
+
+    def wrapped(clock):
+        eng = factory(clock)
+        clockbox["violations"] = install_eviction_oracle(eng.kv)
+        return eng
+
+    metrics, gw = run_replay(wrapped, wl,
+                             ReplayConfig(audio_per_token_s=APT,
+                                          frontier_cap_s=3.0),
+                             seed=seed)
+    gw.eng.check_invariants()
+    return metrics, gw, clockbox["violations"]
+
+
+def _run_sim(wl, seed, *, kv_gb=6.0):
+    # the sim models paper-scale costs: capacity must hold the largest
+    # single prompt of the trace or its stage engine starves (no paging
+    # of a single request's working set) — 6 GB covers every kind;
+    # the eviction-pressure test below shrinks it deliberately
+    pipe = PIPELINES["qwen3-omni-like"](kv_capacity_gb=kv_gb)
+    sim = Simulation(pipe, wl, policy="liveserve", eviction_index="scan",
+                     seed=seed)
+    violations = []
+    for kv in sim.kvs.values():
+        violations += [install_eviction_oracle(kv)]
+    metrics = sim.run(until=3600.0)
+    return metrics, sim, [v for lst in violations for v in lst]
+
+
+# ======================================================================
+# invariants
+# ======================================================================
+def _completion_order(metrics: Metrics):
+    per = {}
+    for t in sorted(metrics.turns, key=lambda t: (t.finish_time,
+                                                  t.turn_index)):
+        if t.finish_time:
+            per.setdefault(t.session_id, []).append(t.turn_index)
+    return per
+
+
+def _check_plane(metrics: Metrics, *, require_outcome: bool):
+    order = _completion_order(metrics)
+    for sid, idxs in order.items():
+        assert idxs == sorted(idxs), \
+            f"{sid}: turns completed out of order: {idxs}"
+    if require_outcome:
+        for t in metrics.turns:
+            assert t.completed or t.barged, \
+                f"{t.session_id}/{t.turn_index} lost (neither completed " \
+                "nor barged)"
+            assert t.ttfp is not None, \
+                f"{t.session_id}/{t.turn_index} never produced audio"
+    return order
+
+
+def _trace_barges(wl, max_turns):
+    from repro.serving.workload import generate
+    return {(s.session_id, ti)
+            for s in generate(wl)
+            for ti, turn in enumerate(s.turns[:max_turns])
+            if turn.barge_in}
+
+
+def check_differential(tiny_model, seed, kind, sessions, barge):
+    wl = _workload(seed, kind, sessions, barge)
+    real_m, gw, real_viol = _run_real(tiny_model, wl, seed)
+    sim_m, sim, sim_viol = _run_sim(wl, seed)
+
+    # shared schema: sim-vs-real comparison is a dict diff by
+    # construction
+    assert set(real_m.summary()) == set(sim_m.summary())
+
+    # per-plane invariants
+    real_order = _check_plane(real_m, require_outcome=True)
+    _check_plane(sim_m, require_outcome=False)
+
+    # the real plane served the whole clamped trace
+    max_turns = ReplayConfig().max_turns
+    want_keys = {(s.session_id, ti) for s in sim.sessions.values()
+                 for ti in range(min(len(s.turns), max_turns))}
+    real_keys = {(t.session_id, t.turn_index) for t in real_m.turns}
+    assert real_keys == want_keys
+    assert real_m.completed_sessions == sessions
+
+    # barge outcomes are trace-determined and must agree across planes
+    barges = _trace_barges(wl, max_turns)
+    real_barged = {(t.session_id, t.turn_index)
+                   for t in real_m.turns if t.barged}
+    sim_barged = {(t.session_id, t.turn_index)
+                  for t in sim_m.turns
+                  if t.barged and t.turn_index < max_turns}
+    assert sim_m.completed_sessions == sessions   # sim didn't starve
+    assert real_barged == barges, (real_barged, barges)
+    assert sim_barged == barges, (sim_barged, barges)
+
+    # frontier cap: never exceeded beyond one audio chunk of granularity
+    assert gw.max_over_frontier_s <= APT + 1e-6
+
+    # eviction victims agree with the next-use policy in BOTH planes
+    assert not real_viol, real_viol
+    assert not sim_viol, sim_viol
+    return real_order
+
+
+# 27 deterministic examples — runs with or without hypothesis, so the
+# acceptance bar (>= 25 differential examples) never depends on an
+# optional dep being installed
+EXAMPLES = [(seed, kind, sessions, barge)
+            for seed in range(3)
+            for kind in ("interactive", "sharegpt", "mixed")
+            for sessions, barge in ((2, 0.0), (3, 0.5), (4, 0.8))]
+
+
+@pytest.mark.parametrize("seed,kind,sessions,barge", EXAMPLES)
+def test_sim_vs_real_differential(tiny, seed, kind, sessions, barge):
+    check_differential(tiny, seed, kind, sessions, barge)
+
+
+@given(seed=st.integers(0, 2 ** 16), kind=st.sampled_from(
+    ["interactive", "sharegpt", "mixed"]),
+    sessions=st.integers(2, 5), barge=st.floats(0.0, 0.8))
+@settings(max_examples=25, deadline=None)
+def test_sim_vs_real_differential_property(tiny, seed, kind, sessions,
+                                           barge):
+    check_differential(tiny, seed, kind, sessions, barge)
+
+
+# ======================================================================
+# eviction-pressure example: victims must be exercised, not just vacuous
+# ======================================================================
+def test_differential_exercises_evictions(tiny):
+    """A tight pool + multi-turn sessions force real physical evictions;
+    the oracle must see them and agree with the next-use ranking."""
+    wl = _workload(7, "interactive", 5, 0.4)
+    real_m, gw, viol = _run_real(tiny, wl, 7, num_pages=14)
+    assert gw.eng.kv.evicted_blocks > 0, \
+        "pool was never under pressure — tighten num_pages"
+    assert not viol, viol
+    _check_plane(real_m, require_outcome=True)
+    gw.eng.check_invariants()
+
+    # the sim under the same trace with a deliberately small pool: some
+    # sessions may starve (the cost-model engine does not page a single
+    # request's working set), but every eviction it does take must obey
+    # the same ranking
+    sim_m, sim, sim_viol = _run_sim(wl, 7, kv_gb=0.5)
+    assert any(kv.evicted_blocks > 0 for kv in sim.kvs.values()), \
+        "sim pool was never under pressure — shrink kv_capacity_gb"
+    assert not sim_viol, sim_viol

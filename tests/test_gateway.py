@@ -178,6 +178,74 @@ def test_gateway_barge_in_and_next_turn(tiny):
     assert m.turns[1].completed
 
 
+# ------------------------------------------------- soak (ISSUE 3)
+def test_gateway_soak_barge_storm(tiny):
+    """16 concurrent sessions with seeded barge-in storms at high tempo:
+    engine invariants hold after *every* round, no slot or page leaks
+    after all sessions hang up, the frontier cap holds, and every turn
+    is accounted (completed or barged) — the leak/cleanup soak for the
+    paged data plane under the asyncio gateway."""
+    apt = 0.4
+    gw = build_gateway(policy="liveserve", scale=16.0, model=tiny,
+                       slots=8, page_size=8, pages_per_seq=8,
+                       num_pages=40,            # mild pool pressure
+                       frontier_cap_s=3.0, round_token_budget=4,
+                       audio_per_token_s=apt)
+    rounds_checked = 0
+    orig_round = gw._round
+
+    def checked_round():
+        nonlocal rounds_checked
+        ran = orig_round()
+        gw.engine.check_invariants()          # clean every round
+        rounds_checked += 1
+        return ran
+
+    gw._round = checked_round
+    m, gw = run_gateway_workload(
+        policy="liveserve", sessions=16, barge_in=0.7, seed=3,
+        rate_rps=8.0, max_prompt=8, max_response=8, max_turns=2,
+        speech_scale=0.5, gateway=gw, timeout_s=300)
+    eng = gw.engine
+    assert rounds_checked > 0 and gw.rounds > 0
+    # no slot leaks: every decode slot returned to the pool
+    assert all(s is None for s in eng.slot_state.values())
+    # no page leaks: every session hung up, every page back in the pool
+    assert all(s.ended for s in eng.sessions.values())
+    assert eng.pool.free_pages == eng.num_pages
+    assert eng.kv.used_blocks == 0
+    assert m.completed_sessions == 16
+    # every turn accounted: finished or barged, none lost in the storm
+    assert len(m.turns) == 32
+    assert all(t.completed or t.barged for t in m.turns)
+    assert sum(t.barged for t in m.turns) >= 4   # the storm stormed
+    # frontier invariant under the storm
+    assert gw.max_over_frontier_s <= apt + 1e-6
+    eng.check_invariants()
+
+
+def test_gateway_surfaces_engine_errors(tiny):
+    """RoundLimitExceeded (or any engine failure) mid-serve must
+    propagate out of the harness — never be swallowed by the event
+    loop or misreported as a load-generator timeout."""
+    gw = build_gateway(policy="liveserve", scale=16.0, model=tiny,
+                       slots=2, page_size=4, pages_per_seq=8)
+    orig = gw.engine.run_round
+    calls = {"n": 0}
+
+    def failing(chunks):
+        calls["n"] += 1
+        if calls["n"] > 2:
+            raise RoundLimitExceeded("injected engine live-lock")
+        return orig(chunks)
+
+    gw.engine.run_round = failing
+    with pytest.raises(RoundLimitExceeded, match="injected"):
+        run_gateway_workload(policy="liveserve", sessions=2,
+                             barge_in=0.0, seed=0, gateway=gw,
+                             timeout_s=120)
+
+
 # ------------------------------------------------- integration (a-c)
 def test_gateway_liveserve_vs_fcfs_integration(tiny):
     """8 concurrent barge-in sessions, scaled clock, real paged engine:

@@ -294,6 +294,134 @@ def test_speech_session_becomes_evictable_after_turn(tiny):
     eng.check_invariants()
 
 
+def test_barge_in_trim_during_chunked_prefill(tiny):
+    """Regression (ISSUE 3): a barge-in trim landing while a submit_turn
+    prompt is only partially teacher-forced must leave pool/accounting
+    bounds intact — for every trim point and page alignment — and the
+    interrupting turn must resume on exactly the committed tokens."""
+    cfg, params = tiny
+    rng = np.random.default_rng(11)
+    pa = rng.integers(0, cfg.vocab_size, size=10)
+    pb = rng.integers(0, cfg.vocab_size, size=5)
+    pa2 = rng.integers(0, cfg.vocab_size, size=4)
+    for page in (4, 8):
+        for trim_round in (0, 1, 2, 3):
+            eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=page,
+                                      pages_per_seq=16, num_pages=12)
+            sa = eng.submit_turn("a", pa, max_new_tokens=6)
+            sb = eng.submit_turn("b", pb, max_new_tokens=5)
+            for _ in range(trim_round):
+                eng.run_round({sa: 3, sb: 3})
+                eng.check_invariants()
+            fed = eng.sessions["a"].kv_len       # partially prefilled
+            eng.barge_in("a")
+            eng.check_invariants()
+            assert eng.sessions["a"].kv_len == fed
+            assert eng.pool.resident_pages("a") == eng.pool.pages_for(fed)
+            assert not eng.kv.session("a").pinned
+            # the interrupting turn extends the committed prefix
+            sa2 = eng.submit_turn("a", pa2, max_new_tokens=4)
+            rounds = 0
+            while eng.active() and rounds < 120:
+                eng.run_round({sa2: 3, sb: 3})
+                eng.check_invariants()
+                rounds += 1
+            assert not eng.active()
+            st = eng.sessions["a"].turn_stats
+            assert st[0]["aborted"] and not st[1]["aborted"]
+            assert st[1]["re_prefill_tokens"] == 0
+
+
+def test_submit_turn_on_saturated_pool_raises_recoverable(tiny):
+    """Regression (ISSUE 3): when a session's offloaded pages cannot be
+    reloaded (pool full of pinned live turns), submit_turn must raise
+    OutOfPages *without* corrupting turn bookkeeping — and succeed once
+    pressure drains, bit-exact with a never-pressured control."""
+    from repro.kvcache.paged import OutOfPages
+    cfg, params = tiny
+    rng = np.random.default_rng(12)
+    pa = rng.integers(0, cfg.vocab_size, size=10)
+    p2 = rng.integers(0, cfg.vocab_size, size=4)
+    pb = rng.integers(0, cfg.vocab_size, size=10)
+    pc = rng.integers(0, cfg.vocab_size, size=9)
+
+    def saturate(eng):
+        eng.add_session("a", pa, max_new_tokens=2)
+        eng.run_to_completion()
+        assert eng.kv.evict(2, eng.clock.now()) == 2
+        # two live turns pin the rest of the pool
+        sb = eng.submit_turn("b", pb, max_new_tokens=20)
+        sc = eng.submit_turn("c", pc, max_new_tokens=20)
+        for _ in range(12):
+            eng.run_round({sb: 4, sc: 4})
+        return sb, sc
+
+    eng = PagedRealtimeEngine(cfg, params, slots=3, page_size=4,
+                              pages_per_seq=8, num_pages=10)
+    sb, sc = saturate(eng)
+    before = eng.sessions["a"].turn_index
+    with pytest.raises(OutOfPages):
+        eng.submit_turn("a", p2, max_new_tokens=4)
+    eng.check_invariants()
+    assert eng.sessions["a"].turn_index == before   # nothing half-started
+    assert not eng.kv.session("a").pinned
+    assert eng.pool.seq("a").offloaded              # still safely in DRAM
+    # pressure drains: b's user hangs up, freeing its pages
+    eng.abort("b")
+    eng.end_session("b")
+    slot = eng.submit_turn("a", p2, max_new_tokens=4)
+    while eng.active():
+        eng.run_round({slot: 2, sc: 1})
+    eng.check_invariants()
+    got = eng.sessions["a"].history[-1]
+    st = eng.sessions["a"].turn_stats[-1]
+    assert st["re_prefill_tokens"] == 0             # reload, not recompute
+
+    control = PagedRealtimeEngine(cfg, params, slots=3, page_size=4,
+                                  pages_per_seq=8, num_pages=64)
+    control.add_session("a", pa, max_new_tokens=2)
+    control.run_to_completion()
+    slot = control.submit_turn("a", p2, max_new_tokens=4)
+    while control.active():
+        control.run_round({slot: 2})
+    assert got == control.sessions["a"].history[-1]
+
+
+def test_run_round_holds_feed_on_pressure_then_recovers(tiny):
+    """Regression (ISSUE 3): a mid-chunk allocation failure (nothing
+    evictable at page-boundary growth) holds the feed for the round —
+    visible in ``pressure_holds`` — instead of crashing, and decode
+    resumes with unchanged tokens once pressure lifts."""
+    cfg, params = tiny
+    rng = np.random.default_rng(13)
+    pa = rng.integers(0, cfg.vocab_size, size=6)
+    pb = rng.integers(0, cfg.vocab_size, size=6)
+
+    def drive(num_pages, relieve):
+        eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                                  pages_per_seq=4, num_pages=num_pages)
+        sa = eng.submit_turn("a", pa, max_new_tokens=6)
+        sb = eng.submit_turn("b", pb, max_new_tokens=6)
+        rounds = 0
+        while eng.active() and rounds < 200:
+            if relieve and eng.pressure_holds > 0 \
+                    and eng.slot_state[sb] is not None:
+                eng.abort("b")              # b's user hangs up: pressure
+                eng.end_session("b")        # drains mid-run
+            eng.run_round({sa: 2, sb: 2})
+            eng.check_invariants()
+            rounds += 1
+        return eng
+
+    eng = drive(num_pages=4, relieve=True)
+    assert eng.pressure_holds > 0, "pool never hit the mid-chunk bound"
+    assert not eng.active()                 # a finished after relief
+    got = eng.sessions["a"].history[-1]
+    control = drive(num_pages=64, relieve=False)
+    assert control.pressure_holds == 0
+    assert got == control.sessions["a"].history[-1]
+
+
 def test_end_session_returns_pages(tiny):
     cfg, params = tiny
     rng = np.random.default_rng(6)
