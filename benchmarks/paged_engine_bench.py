@@ -13,7 +13,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import fmt, row
 
 
 def _mean_step_us(eng, steps: int):
@@ -87,11 +87,14 @@ def run(quick: bool = False) -> None:
             f"tokens_s={tok_s:.0f}")
 
     # DRAM->HBM reload path: finish the turns (unpin), offload suffix
-    # pages via the manager, then time the physical reload per page (the
-    # engine's hook records the host->device wall time)
+    # pages via the manager (flushed so the copies are durably in DRAM
+    # — otherwise copy-then-free would hand them back for free), then
+    # time the physical reload per page (the engine's per-chunk io
+    # records the staged host->device wall time)
     paged.run_to_completion()
     want = 4 if quick else 8
     freed = paged.kv.evict(want, paged.clock.now())
+    paged.flush_transfers()
     paged.reload_wall_s.clear()
     reloaded = 0
     for sid in list(paged.kv.sessions):
@@ -104,3 +107,69 @@ def run(quick: bool = False) -> None:
         * paged.k_pages.dtype.itemsize * cfg.num_layers / 1024.0
     row("paged_engine/reload_per_page", us_page,
         f"pages={reloaded};evicted={freed};page_kb={page_kb:.1f}")
+
+    _overlap_section(cfg, params, quick)
+
+
+def _overlap_section(cfg, params, quick: bool) -> None:
+    """Async chunked transfer overlap (ISSUE 4): a multi-turn workload
+    where one session's speech-time preload drains chunk-by-chunk
+    between another session's decode rounds. Reports the fraction of
+    preloaded reload bytes completed off the turn critical path
+    (acceptance: >= 0.70) plus the mean per-chunk drain wall time."""
+    import jax.numpy as jnp
+    from repro.serving.paged_engine import PagedRealtimeEngine
+
+    rng = np.random.default_rng(1)
+    page_size = 8
+    bytes_per_token = 2 * cfg.num_layers * cfg.num_kv_heads \
+        * cfg.resolved_head_dim * jnp.dtype(cfg.dtype).itemsize
+    # ~0.2 modeled s per page: slow enough that the time credit never
+    # fires inside the bench's millisecond rounds — every off-path page
+    # got there by a real drain between decode sub-batches
+    eng = PagedRealtimeEngine(
+        cfg, params, slots=2, page_size=page_size, pages_per_seq=12,
+        num_pages=64, chunk_pages=1,
+        pcie_gb_s=bytes_per_token * page_size / 0.2e9)
+    per_page_s = eng.kv.channel.transfer_time(1)
+    turns = 2 if quick else 3
+    evict_pages = 4
+    t0 = time.perf_counter()
+    eng.add_session("a", rng.integers(0, cfg.vocab_size, size=24),
+                    max_new_tokens=6)
+    eng.run_to_completion()
+    eng.add_session("b", rng.integers(0, cfg.vocab_size, size=8),
+                    max_new_tokens=12 * turns + 6)
+    for _ in range(turns):
+        # idle gap long enough to lapse the previous preload's
+        # protection TTL, so the eviction pass can pick a again
+        eng.clock.tick(12.0)
+        assert eng.kv.evict(evict_pages, eng.clock.now()) == evict_pages
+        eng.flush_transfers()                # copies durable in DRAM
+        window = (evict_pages + 2) * per_page_s / 0.8
+        eng.user_speech_start("a", expected_dur_s=window)
+        for _ in range(evict_pages + 2):     # b decodes; chunks drain
+            eng.step()
+        eng.start_turn("a", rng.integers(0, cfg.vocab_size, size=4),
+                       max_new_tokens=3)
+        # drive only a's turn to completion (b keeps its budget)
+        while any(s is not None and s.session_id == "a"
+                  and s.request.is_live()
+                  for s in eng.slot_state.values()):
+            eng.step()
+    eng.check_invariants()
+    wall = time.perf_counter() - t0
+    st = eng.transfer.stats
+    frac = st.overlap_fraction()
+    stalls = [t["reload_stall_s"]
+              for t in eng.sessions["a"].turn_stats[1:]]
+    row("paged_engine/reload_overlap_frac", frac * 100.0,
+        f"off_path={st.reload_pages_off_path};"
+        f"on_path={st.reload_pages_on_path};turns={turns};"
+        f"mean_stall_ms={fmt(1e3 * sum(stalls) / max(1, len(stalls)))};"
+        f"wall_s={fmt(wall, 2)}")
+    walls = eng.reload_wall_s                    # per-chunk staged io
+    row("paged_engine/transfer_chunk_drain",
+        sum(walls) / max(1, len(walls)) * 1e6,
+        f"chunks={st.chunks_drained};reload_chunks={len(walls)};"
+        f"chunk_pages={eng.transfer.chunk_pages}")

@@ -106,6 +106,12 @@ class KVManager:
         # lazy-deletion heap of (-t_next, tiebreak, session_id, version)
         self._heap: List[Tuple[float, int, str, int]] = []
         self._version: Dict[str, int] = {}
+        # whether a session's *current* version is live in the heap —
+        # a session that becomes evictable again with no interaction
+        # event (e.g. its preload-protection TTL lapses) must be
+        # re-seeded by the next eviction pass, or heap mode silently
+        # never finds it again
+        self._in_heap: Dict[str, bool] = {}
         self._tiebreak = itertools.count()
         # working blocks owned by live requests (decode growth etc.)
         self.working_blocks = 0
@@ -113,6 +119,9 @@ class KVManager:
         # registers these so accounting decisions move real pages
         self._on_evict_pages = None
         self._on_reload_pages = None
+        self._on_cancel_reload = None
+        self._on_finish_transfers = None
+        self._pending_offload = None
         # telemetry
         self.evicted_blocks = 0
         self.reloaded_blocks = 0
@@ -120,26 +129,49 @@ class KVManager:
         self.residency_log: List[Tuple[float, int]] = []
 
     # ------------------------------------------------------------- hooks
-    def set_page_hooks(self, *, on_evict=None, on_reload=None) -> None:
-        """Register the narrow data-plane hooks (DESIGN.md §3): this
-        manager stays pure accounting, but a paged engine can make every
-        eviction/reload decision move physical pages.
+    def set_page_hooks(self, *, on_evict=None, on_reload=None,
+                       on_cancel_reload=None, on_finish_transfers=None,
+                       pending_offload=None) -> None:
+        """Register the narrow data-plane hooks (DESIGN.md §3, §10):
+        this manager stays pure accounting, but a paged engine can make
+        every eviction/reload decision move physical pages.
 
         on_evict(sid, blocks): called after a session's HBM range shrank
         by `blocks` — the engine offloads that many suffix pages to its
-        DRAM tier. on_reload(sid, blocks): called after a reload was
-        admitted — the engine brings the offloaded pages back. Both fire
-        synchronously; the TransferChannel still models the wall-clock
-        cost the simulator/metrics charge for the movement.
+        DRAM tier (chunked copy-then-free under the async transfer
+        engine). on_reload(sid, blocks, background=..., transfer=...):
+        called after a reload was admitted — the engine queues (or, on
+        the synchronous path, immediately moves) the offloaded pages
+        back; `transfer` carries the channel-modeled [start, done] span
+        the chunks interpolate. The async hooks:
+
+        on_cancel_reload(sid) -> pages: drop queued reload chunks (burst
+        cancel); the manager reverts its accounting by the returned page
+        count. on_finish_transfers(sid, now) -> (on_s, off_s): settle a
+        session's queued chunks at turn start, returning the on-path
+        stall and the off-path seconds already hidden. pending_offload
+        (sid) -> pages: copy-then-free offloads still in flight — a
+        reload cancels those for free, so the modeled transfer shrinks
+        by that many blocks.
         """
         self._on_evict_pages = on_evict
         self._on_reload_pages = on_reload
+        self._on_cancel_reload = on_cancel_reload
+        self._on_finish_transfers = on_finish_transfers
+        self._pending_offload = pending_offload
 
     @property
     def physical_pages(self) -> bool:
         """True when a data plane moves real pages on our decisions."""
         return (self._on_evict_pages is not None
                 or self._on_reload_pages is not None)
+
+    @property
+    def async_transfers(self) -> bool:
+        """True when the data plane settles transfers chunk-by-chunk
+        (the preloader then charges stalls from the physical ledger,
+        not from the modeled Transfer alone)."""
+        return self._on_finish_transfers is not None
 
     # ------------------------------------------------------------- state
     def session(self, sid: str) -> SessionKV:
@@ -194,6 +226,7 @@ class KVManager:
         t_next = self.next_use_estimate(sid, now)
         v = self._version.get(sid, 0) + 1
         self._version[sid] = v
+        self._in_heap[sid] = True
         heapq.heappush(self._heap, (-t_next, next(self._tiebreak), sid, v))
 
     def refresh_session(self, sid: str, now: float) -> None:
@@ -224,6 +257,7 @@ class KVManager:
             neg_t, _, sid, v = heapq.heappop(self._heap)
             if self._version.get(sid) != v:
                 continue                     # stale entry (lazy deletion)
+            self._in_heap[sid] = False       # current entry leaves heap
             kv = self.sessions.get(sid)
             if kv is None or kv.evictable(now) <= 0:
                 continue
@@ -244,9 +278,13 @@ class KVManager:
         t0 = _time.perf_counter()
         freed = 0
         if self.policy == "next_use" and self.index_mode == "heap":
-            # seed the heap lazily with any unseen evictable sessions
+            # seed the heap lazily: unseen evictable sessions, plus
+            # sessions evictable again without an interaction event
+            # (protection TTL lapsed, a candidate pop rejected them
+            # earlier) whose current version is no longer live in it
             for sid, kv in self.sessions.items():
-                if kv.evictable(now) > 0 and sid not in self._version:
+                if kv.evictable(now) > 0 \
+                        and not self._in_heap.get(sid, False):
                     self._push_index(sid, now)
             while freed < need_blocks:
                 sid = self._pop_heap_candidate(now)
@@ -297,6 +335,7 @@ class KVManager:
         data plane frees the physical pages."""
         self.sessions.pop(sid, None)
         self._version.pop(sid, None)
+        self._in_heap.pop(sid, None)
 
     def pin(self, sid: str) -> None:
         self.session(sid).pinned = True
@@ -329,6 +368,15 @@ class KVManager:
         kv = self.session(sid)
         return kv.dram_blocks * self.block_size if kv.discarded else 0
 
+    def transfer_blocks(self, sid: str) -> int:
+        """Blocks a reload would actually move over the channel: the
+        offloaded suffix minus copy-then-free offloads still in flight
+        (cancelling those restores the pages without a transfer)."""
+        n = self.session(sid).dram_blocks
+        if n > 0 and self._pending_offload is not None:
+            n -= min(n, self._pending_offload(sid))
+        return max(0, n)
+
     def reload(self, sid: str, now: float, *, background: bool):
         """Bring the offloaded suffix back. Returns Transfer or None."""
         kv = self.session(sid)
@@ -344,14 +392,41 @@ class KVManager:
             kv.pinned = was_pinned
         if self.free_blocks < n:
             return None
-        t = self.channel.submit(sid, n, now, background)
+        # only blocks whose bytes are truly on the host cross the
+        # channel; cancellable in-flight offloads come back for free
+        t = self.channel.submit(sid, self.transfer_blocks(sid), now,
+                                background)
         # blocks become resident on completion; account them now so
         # concurrent admissions see the pressure
         kv.hbm_blocks += n
         self.reloaded_blocks += n
         if self._on_reload_pages is not None:
-            self._on_reload_pages(sid, n)
+            self._on_reload_pages(sid, n, background=background,
+                                  transfer=t)
         return t
+
+    def cancel_reload(self, sid: str, now: float) -> int:
+        """Burst cancel: drop the session's queued reload chunks and
+        revert the admission-time accounting for exactly the pages that
+        had not yet landed. Returns blocks cancelled (0 without an
+        async data plane — bytes already moved)."""
+        if self._on_cancel_reload is None:
+            return 0
+        n = self._on_cancel_reload(sid)
+        if n > 0:
+            kv = self.session(sid)
+            kv.hbm_blocks = max(0, kv.hbm_blocks - n)
+            self.reloaded_blocks -= n
+            self.refresh_session(sid, now)
+        return n
+
+    def finish_transfers(self, sid: str, now: float):
+        """Turn-start settlement (async data plane): physically complete
+        the session's queued reload chunks; returns (on_path_s,
+        off_path_s). (0.0, 0.0) without an async plane."""
+        if self._on_finish_transfers is None:
+            return 0.0, 0.0
+        return self._on_finish_transfers(sid, now)
 
     def protect(self, sid: str, now: float) -> None:
         kv = self.session(sid)

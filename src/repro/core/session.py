@@ -45,6 +45,7 @@ class Request:
     # bookkeeping for scheduling
     last_scheduled: float = -1.0
     reload_stall_s: float = 0.0         # on-path KV reload charged to TTFP
+    reload_off_path_s: float = 0.0      # reload seconds hidden off-path
 
     @property
     def total_context(self) -> int:

@@ -82,6 +82,17 @@ class PagedKVLayout:
     def replicated(self) -> NamedSharding:
         return NamedSharding(self.mesh, P())
 
+    def stage_host_chunk(self, host_chunk):
+        """Stage one transfer-engine reload chunk ([n, 2, L, page, Hkv,
+        hd] host stack) onto the mesh. The chunk is replicated — it
+        indexes whole logical pages, and the follow-up page-store
+        scatter plus the engine's placement re-commit
+        (``_place_pages``) land it on the layout's exact sharding. The
+        caller blocks on *this* buffer to time the transferred bytes
+        alone (never on the sharded page store, whose readiness drags
+        in unrelated decode work — DESIGN.md §10)."""
+        return jax.device_put(host_chunk, self.replicated)
+
     # ------------------------------------------------------- shard body
     def write_token(self, kc, vc, k, v, write_page, write_slot):
         """Per-shard page write of one token per batch row.

@@ -41,6 +41,20 @@ class SeqPages:
     offloaded: Dict[int, np.ndarray] = field(default_factory=dict)
     # offloaded: logical page index (position in `pages`) -> host copy;
     # an offloaded slot keeps -1 in `pages`.
+    #
+    # In-flight transfer marks (the async chunked transfer engine,
+    # DESIGN.md §10). Each logical page is in exactly one state:
+    #   resident    pages[li] >= 0, li not in loading/offloading
+    #   offloading  pages[li] >= 0, li in offloading — device contents
+    #               still valid/usable; host copy not yet durable
+    #               (copy-then-free: the slot frees when the chunk
+    #               drains)
+    #   loading     pages[li] >= 0 (slot reserved), li in loading AND
+    #               li in offloaded — host copy is the source of truth,
+    #               device contents not yet arrived
+    #   offloaded   pages[li] == -1, li in offloaded only
+    loading: set = field(default_factory=set)
+    offloading: set = field(default_factory=set)
 
 
 class PagedPool:
@@ -88,6 +102,11 @@ class PagedPool:
         keep = self.pages_for(length)
         freed = 0
         while len(s.pages) > keep:
+            li = len(s.pages) - 1
+            assert li not in s.loading and li not in s.offloading, \
+                f"{seq_id}: trim would drop page {li} mid-transfer " \
+                "(transfers run only for idle sessions; trim only on " \
+                "the live turn's lookahead)"
             phys = s.pages.pop()
             s.offloaded.pop(len(s.pages), None)
             if phys >= 0:
@@ -123,43 +142,164 @@ class PagedPool:
         return np.array([self.seq(s).length for s in seq_ids], np.int32)
 
     # ------------------------------------------------------------ tiers
-    def offload_suffix(self, seq_id: str, n_pages: int, kv_pages) -> int:
-        """Move the LAST n_pages of a sequence to host (suffix-first,
-        §5.1). kv_pages: device array [num_pages, page, Hkv, hd] (or a
-        pytree leaf); contents copied to host. Returns pages freed."""
-        s = self.seq(seq_id)
-        resident = [i for i, p in enumerate(s.pages) if p >= 0]
-        take = resident[-n_pages:] if n_pages else []
-        for li in reversed(take):
-            phys = s.pages[li]
-            s.offloaded[li] = np.asarray(kv_pages[phys])
-            s.pages[li] = -1
-            self.free.append(phys)
-        return len(take)
+    #
+    # Chunk-grained primitives for the async transfer engine
+    # (core/transfer_engine.py): begin_* flips accounting state and
+    # reserves/marks slots; complete_* moves the bytes for one chunk;
+    # cancel_* reverts marks without moving anything. The legacy
+    # whole-session `offload_suffix`/`reload` below are begin+complete
+    # in one call (the synchronous path, still used by pool tests and
+    # the non-async engine mode).
 
-    def reload(self, seq_id: str, kv_pages):
-        """Bring offloaded pages back. Returns (updated kv_pages, loaded
-        page count). kv_pages is a jax array (or adapter); the update is
-        functional and batched — one scatter for all pages, not one full
-        array copy per page (this sits on the sync-fallback critical
-        path). All-or-nothing: raises before moving anything if the pool
-        cannot hold every offloaded page."""
+    def begin_reload(self, seq_id: str) -> List[int]:
+        """Reserve a physical slot for every offloaded page and mark it
+        ``loading``. All-or-nothing: raises before mutating if the pool
+        cannot hold them all. Returns the logical indices needing a
+        host->device transfer, prefix-first. (Pages whose offload is
+        still in flight are NOT included — cancel those with
+        ``cancel_offloading`` first: their bytes never left HBM.)"""
         s = self.seq(seq_id)
-        logical = sorted(s.offloaded)
-        if not logical:
-            return kv_pages, 0
+        logical = sorted(li for li in s.offloaded if li not in s.loading)
         if len(self.free) < len(logical):
             raise OutOfPages(f"pool exhausted reloading {seq_id}")
-        phys = [self.free.pop() for _ in logical]
-        kv_pages = kv_pages.at[np.asarray(phys)].set(
-            np.stack([s.offloaded[li] for li in logical]))
-        for li, p in zip(logical, phys):
-            s.pages[li] = p
-        s.offloaded.clear()
-        return kv_pages, len(logical)
+        for li in logical:
+            s.pages[li] = self.free.pop()
+            s.loading.add(li)
+        return logical
+
+    def complete_reload(self, seq_id: str, logical: List[int], kv_pages,
+                        staged=None):
+        """Land one reload chunk: scatter the host copies into their
+        reserved slots (one batched functional update), clear the
+        ``loading`` marks, drop the host copies. ``staged`` overrides
+        the source with an already-device-resident [n, 2, L, ...] stack
+        (the engine stages it to time only the transferred bytes).
+        Returns the updated kv_pages."""
+        s = self.seq(seq_id)
+        if not logical:
+            return kv_pages
+        phys = [s.pages[li] for li in logical]
+        src = staged if staged is not None \
+            else np.stack([s.offloaded[li] for li in logical])
+        kv_pages = kv_pages.at[np.asarray(phys)].set(src)
+        for li in logical:
+            assert li in s.loading, f"{seq_id}: page {li} not loading"
+            s.loading.remove(li)
+            del s.offloaded[li]
+        return kv_pages
+
+    def cancel_loading(self, seq_id: str,
+                       logical: Optional[List[int]] = None) -> int:
+        """Un-reserve loading pages (eviction of a loading session,
+        burst cancel, hangup): the slot returns to the free list, the
+        host copy stays authoritative in ``offloaded``. Zero-copy —
+        the contents never arrived. Returns pages cancelled."""
+        s = self.seq(seq_id)
+        take = sorted(s.loading) if logical is None else list(logical)
+        for li in take:
+            assert li in s.loading, f"{seq_id}: page {li} not loading"
+            self.free.append(s.pages[li])
+            s.pages[li] = -1
+            s.loading.remove(li)
+        return len(take)
+
+    def evictable_suffix(self, seq_id: str, n_pages: int):
+        """Pick the LAST ``n_pages`` the eviction policy can free
+        (suffix-first, §5.1), split by how they free: ``cancel_lis``
+        are loading pages (cancel the in-flight reload — free
+        immediately, zero copy) and ``offload_lis`` are resident pages
+        (need a device->host copy). Pages already offloading are
+        skipped — their blocks were accounted by an earlier pass."""
+        s = self.seq(seq_id)
+        cancel_lis, offload_lis = [], []
+        for li in range(len(s.pages) - 1, -1, -1):
+            if len(cancel_lis) + len(offload_lis) >= n_pages:
+                break
+            if s.pages[li] < 0 or li in s.offloading:
+                continue
+            if li in s.loading:
+                cancel_lis.append(li)
+            else:
+                offload_lis.append(li)
+        return cancel_lis, offload_lis
+
+    def mark_offloading(self, seq_id: str, logical: List[int]) -> None:
+        """Copy-then-free step 1: the pages stay resident and usable;
+        the slot frees only when ``complete_offload`` lands the copy."""
+        s = self.seq(seq_id)
+        for li in logical:
+            assert s.pages[li] >= 0 and li not in s.loading \
+                and li not in s.offloading, \
+                f"{seq_id}: page {li} not plain-resident"
+            s.offloading.add(li)
+
+    def complete_offload(self, seq_id: str,
+                         copies: Dict[int, np.ndarray]) -> int:
+        """Copy-then-free step 2: the host copies are durable — record
+        them and free the physical slots. Returns pages freed."""
+        s = self.seq(seq_id)
+        for li, host in copies.items():
+            assert li in s.offloading, f"{seq_id}: page {li} not offloading"
+            s.offloaded[li] = host
+            self.free.append(s.pages[li])
+            s.pages[li] = -1
+            s.offloading.remove(li)
+        return len(copies)
+
+    def cancel_offloading(self, seq_id: str,
+                          logical: Optional[List[int]] = None) -> List[int]:
+        """A reload/turn arrived before the copy drained: keep the pages
+        resident (their device contents never left). Returns the logical
+        indices whose offload was cancelled."""
+        s = self.seq(seq_id)
+        take = sorted(s.offloading) if logical is None else list(logical)
+        for li in take:
+            assert li in s.offloading, f"{seq_id}: page {li} not offloading"
+            s.offloading.remove(li)
+        return take
+
+    # --------------------------------------------- synchronous wrappers
+    def offload_suffix(self, seq_id: str, n_pages: int, kv_pages) -> int:
+        """Move the LAST n_pages of a sequence to host (suffix-first,
+        §5.1), synchronously: begin + complete in one call. kv_pages:
+        device array [num_pages, page, Hkv, hd] (or a pytree leaf).
+        Loading pages in the suffix are cancelled instead of copied
+        (their contents only exist on the host). Returns pages freed."""
+        cancel_lis, offload_lis = self.evictable_suffix(seq_id, n_pages)
+        self.cancel_loading(seq_id, cancel_lis)
+        self.mark_offloading(seq_id, offload_lis)
+        s = self.seq(seq_id)
+        self.complete_offload(
+            seq_id, {li: np.asarray(kv_pages[s.pages[li]])
+                     for li in offload_lis})
+        return len(cancel_lis) + len(offload_lis)
+
+    def reload(self, seq_id: str, kv_pages):
+        """Bring offloaded pages back, synchronously. Returns (updated
+        kv_pages, restored page count — transfers plus cancelled
+        in-flight offloads). The scatter is functional and batched (one
+        update for all pages); all-or-nothing on free space."""
+        cancelled = self.cancel_offloading(seq_id)
+        logical = self.begin_reload(seq_id)
+        kv_pages = self.complete_reload(seq_id, logical, kv_pages)
+        return kv_pages, len(logical) + len(cancelled)
 
     def resident_pages(self, seq_id: str) -> int:
-        return sum(1 for p in self.seq(seq_id).pages if p >= 0)
+        """Usable-resident pages: excludes loading reservations (their
+        contents are still in flight), includes offloading pages (still
+        valid on device until the copy drains). Read-only: an unknown
+        or released sequence reports 0 without creating a ghost entry
+        (callers probe sessions the pool may have dropped)."""
+        s = self.seqs.get(seq_id)
+        if s is None:
+            return 0
+        return sum(1 for li, p in enumerate(s.pages)
+                   if p >= 0 and li not in s.loading)
+
+    def inflight_pages(self, seq_id: str):
+        """(loading, offloading) page counts for one sequence."""
+        s = self.seq(seq_id)
+        return len(s.loading), len(s.offloading)
 
     def stats(self) -> dict:
         return {
@@ -168,4 +308,8 @@ class PagedPool:
             "seqs": len(self.seqs),
             "offloaded_pages": sum(len(s.offloaded)
                                    for s in self.seqs.values()),
+            "loading_pages": sum(len(s.loading)
+                                 for s in self.seqs.values()),
+            "offloading_pages": sum(len(s.offloading)
+                                    for s in self.seqs.values()),
         }

@@ -69,11 +69,18 @@ def main() -> None:
                     help="live engine: decode batch rows")
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="live engine: KV pool size in pages")
+    ap.add_argument("--preload-chunks", type=int, default=None,
+                    help="live engine: transfer chunks each round may "
+                         "drain between decode sub-batches — the async "
+                         "chunked KV transfer budget that lands "
+                         "speech-time preloads off the turn critical "
+                         "path (DESIGN.md §10)")
     args = ap.parse_args()
 
     if args.engine != "live":
         live_only = [f"--{f.replace('_', '-')}" for f in
-                     ("clock_scale", "slots", "kv_pages")
+                     ("clock_scale", "slots", "kv_pages",
+                      "preload_chunks")
                      if getattr(args, f) is not None]
         if live_only:
             ap.error(f"{', '.join(live_only)} only apply to "
@@ -137,10 +144,14 @@ def main() -> None:
                    if args.clock_scale is not None else 4.0),
             slots=args.slots if args.slots is not None else 8,
             num_pages=args.kv_pages, mesh=mesh,
+            preload_chunks=(args.preload_chunks
+                            if args.preload_chunks is not None else 1),
             frontier_cap_s=3.0 if system == "liveserve" else None)
         s = m.summary()
         s["rounds"] = gw.rounds
         s["max_over_frontier_s"] = gw.max_over_frontier_s
+        s["transfer_overlap_frac"] = \
+            gw.engine.transfer.stats.overlap_fraction()
     else:
         from repro.serving.costmodel import PIPELINES
         from repro.serving.simulator import run_sim

@@ -59,6 +59,9 @@ class GatewayConfig:
     frontier_cap_s: Optional[float] = None
     sched: Optional[SchedulerConfig] = None
     idle_sleep_s: float = 0.05           # scaled-clock wait when idle
+    # transfer chunks drained per idle pass (run_round drains its own
+    # per-round budget; this keeps preloads moving when nothing decodes)
+    idle_transfer_chunks: int = 2
 
 
 @dataclass
@@ -92,6 +95,15 @@ class SessionHandle:
 
     async def recv(self) -> SessionEvent:
         return await self._gs.outbox.get()
+
+
+def record_admitted_turn(rec, r: Request) -> None:
+    """Copy the admission-time reload accounting from the Request onto
+    the TurnRecord — the one coupling between the engine's turn stats
+    and the serving metrics, shared by both gateway twins so the
+    sim/real differential cannot drift field-by-field."""
+    rec.reload_stall_s = r.reload_stall_s
+    rec.reload_off_path_s = r.reload_off_path_s
 
 
 def control_round(eng, scheduler, pending, *, token_budget: int,
@@ -320,7 +332,7 @@ class RealtimeGateway:
 
     # ------------------------------------------------------------ rounds
     def _record_admit(self, sid: str, r: Request) -> None:
-        self._rec(sid).reload_stall_s = r.reload_stall_s
+        record_admitted_turn(self._rec(sid), r)
 
     def _round(self) -> bool:
         """One scheduler-driven round. Returns True if any work ran."""
@@ -408,6 +420,11 @@ class RealtimeGateway:
             if self._stopping and self._inbox.empty() \
                     and not self._live_work():
                 return
+            # idle: nothing decodes this instant, but queued transfer
+            # chunks (a speech-time preload, a copy-then-free offload)
+            # still progress — this is exactly the window the paper
+            # hides reload work in (DESIGN.md §10)
+            self.engine.drain_transfers(self.cfg.idle_transfer_chunks)
             wake = self.cfg.idle_sleep_s
             held = self.scheduler.hold_wake_s(
                 getattr(self, "last_decision", None)) \

@@ -57,12 +57,15 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                   frontier_cap_s: Optional[float] = None,
                   sched_cfg: Optional[SchedulerConfig] = None,
                   model: Optional[tuple] = None,
-                  mesh=None, seed: int = 0) -> RealtimeGateway:
+                  mesh=None, seed: int = 0,
+                  preload_chunks: int = 1) -> RealtimeGateway:
     """``mesh``: a ('data','model') jax mesh shards the engine's page
     store over 'model' (DESIGN.md §9) — on a laptop run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
     virtual host-platform mesh; everything above the engine is
-    mesh-agnostic."""
+    mesh-agnostic. ``preload_chunks``: transfer chunks each round may
+    drain between decode sub-batches (the serve flag of the same name;
+    DESIGN.md §10)."""
     from repro.serving.paged_engine import PagedRealtimeEngine
     cfg, params = model if model is not None else tiny_model(seed)
     clock = ScaledWallClock(scale)
@@ -70,7 +73,8 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                               page_size=page_size,
                               pages_per_seq=pages_per_seq,
                               num_pages=num_pages, clock=clock,
-                              mesh=mesh)
+                              mesh=mesh,
+                              transfer_chunks_per_round=preload_chunks)
     _warm_engine(eng)
     gw = RealtimeGateway(eng, cfg=GatewayConfig(
         policy=policy, audio_per_token_s=audio_per_token_s,

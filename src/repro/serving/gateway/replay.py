@@ -32,7 +32,8 @@ from repro.core.scheduler import (FCFSScheduler, SchedulerConfig,
                                   UrgencyScheduler)
 from repro.core.session import Request, RequestState
 from repro.serving.engine import RoundLimitExceeded
-from repro.serving.gateway.gateway import control_round
+from repro.serving.gateway.gateway import (control_round,
+                                           record_admitted_turn)
 from repro.serving.metrics import Metrics, TurnRecord
 from repro.serving.workload import WorkloadConfig, generate
 
@@ -239,6 +240,9 @@ class ReplayGateway:
                 return i
         return None
 
+    def _record_admit(self, sid: str, r: Request) -> None:
+        record_admitted_turn(self._rec(sid), r)
+
     # ------------------------------------------------------------ rounds
     def _round(self) -> bool:
         """One scheduler round: the shared ``control_round`` body (the
@@ -249,8 +253,7 @@ class ReplayGateway:
             eng, self.scheduler, self._pending,
             token_budget=self.cfg.round_token_budget,
             frontier_cap_s=self.cfg.frontier_cap_s,
-            record_admit=lambda sid, r: setattr(
-                self._rec(sid), "reload_stall_s", r.reload_stall_s))
+            record_admit=self._record_admit)
         if decision is None:
             return False
         if not chunks:
@@ -331,6 +334,15 @@ class ReplayGateway:
                 if self.rounds > max_rounds:
                     raise RoundLimitExceeded(
                         f"replay still live after {max_rounds} rounds")
+                continue
+            # idle gap: queued transfer chunks drain before time jumps
+            # to the next client event — the deterministic mirror of
+            # the asyncio gateway's idle-loop drain, so a speech-time
+            # preload lands during the (virtual) utterance
+            if self.eng.drain_transfers(1):
+                self.clock.tick(self.cfg.round_dt)
+                if check_every_round is not None:
+                    check_every_round()
                 continue
             if self._events:
                 self.clock.advance_to(self._events[0][0])

@@ -50,6 +50,7 @@ from repro.core.monitor import RuntimeMonitor
 from repro.core.preload import SpeechPreloader
 from repro.core.scheduler import SchedulerConfig, UrgencyScheduler
 from repro.core.session import Phase, Request, RequestState
+from repro.core.transfer_engine import TransferEngine
 from repro.kernels.paged_attention import paged_attention
 from repro.kvcache.paged import OutOfPages, PagedPool
 from repro.models import init_cache, prefill
@@ -167,6 +168,7 @@ class PagedSession:
     turn_index: int = 0
     turn_arrival: float = 0.0
     reload_stall_s: float = 0.0     # on-path stall charged to this turn
+    reload_off_path_s: float = 0.0  # reload seconds hidden off-path
     ended: bool = False             # user hung up; pages released
     history: List[List[int]] = field(default_factory=list)
     turn_stats: List[dict] = field(default_factory=list)
@@ -178,7 +180,10 @@ class PagedRealtimeEngine:
                  clock=None, scheduler: Optional[UrgencyScheduler] = None,
                  kv: Optional[KVManager] = None, kv_policy: str = "next_use",
                  pcie_gb_s: float = 25.0, preload: bool = True,
-                 interpret: Optional[bool] = None, mesh=None):
+                 interpret: Optional[bool] = None, mesh=None,
+                 async_transfers: bool = True,
+                 chunk_pages: Optional[int] = None,
+                 transfer_chunks_per_round: int = 1):
         assert cfg.family in ("dense", "moe", "vlm") and cfg.mla is None \
             and cfg.sliding_window is None, \
             "paged engine serves global-attention KV families"
@@ -224,8 +229,23 @@ class PagedRealtimeEngine:
         assert self.kv.capacity == self.num_pages \
             and self.kv.block_size == page_size, \
             "KVManager accounting must be 1:1 with pool pages"
-        self.kv.set_page_hooks(on_evict=self._offload_pages,
-                               on_reload=self._reload_pages)
+        # the async chunked transfer engine (DESIGN.md §10): DRAM<->HBM
+        # movement queues as page-group chunks drained by run_round (and
+        # the gateways' idle loops); async_transfers=False degrades to
+        # the synchronous move-at-decision-time plane (the differential
+        # control for bit-exactness tests)
+        self.async_transfers = async_transfers
+        self.transfer_chunks_per_round = transfer_chunks_per_round
+        self.transfer = TransferEngine(self.kv.channel,
+                                       chunk_pages=chunk_pages)
+        self.transfer.set_io(reload_chunk=self._io_reload_chunk,
+                             offload_chunk=self._io_offload_chunk)
+        self.kv.set_page_hooks(
+            on_evict=self._offload_pages, on_reload=self._reload_pages,
+            on_cancel_reload=self._cancel_reload_pages,
+            on_finish_transfers=(self._finish_transfers
+                                 if async_transfers else None),
+            pending_offload=self.transfer.pending_offload_pages)
         self.preloader = SpeechPreloader(self.kv, self.monitor,
                                          enabled=preload)
         self.scheduler = scheduler or UrgencyScheduler(
@@ -262,32 +282,132 @@ class PagedRealtimeEngine:
         # never admitted must report 0/0, not have `pool.seq` re-create a
         # ghost entry for it (check_invariants iterates pool.seqs)
         s = self.pool.seqs.get(sid)
-        resident = sum(1 for p in s.pages if p >= 0) if s else 0
-        offloaded = len(s.offloaded) if s else 0
-        self.monitor.on_page_movement(sid, resident=resident,
-                                      offloaded=offloaded)
+        # resident = usable on device (offloading pages still count: the
+        # copy-then-free slot holds valid contents); offloaded = host
+        # copy is authoritative (loading pages still count: contents
+        # have not landed yet) — the two partitions sum to committed
+        self.monitor.on_page_movement(
+            sid, resident=self.pool.resident_pages(sid),
+            offloaded=len(s.offloaded) if s else 0)
 
     def _offload_pages(self, sid: str, blocks: int) -> None:
-        """KVManager eviction hook: physically move suffix pages to DRAM."""
-        store = LayerStackedPages(self.k_pages, self.v_pages)
-        moved = self.pool.offload_suffix(sid, blocks, store)
-        assert moved == blocks, \
-            f"accounting evicted {blocks} but only {moved} resident ({sid})"
-        self.offload_events.append((self.clock.now(), sid, moved))
+        """KVManager eviction hook: queue suffix pages for DRAM
+        (copy-then-free — slots stay usable until each chunk drains;
+        allocation pressure demand-drains via ``_demand_free_pages``).
+        Suffix pages whose *reload* is still in flight are cancelled
+        instead: freeing them needs no copy, their bytes never left the
+        host store (the eviction-of-a-loading-session rule)."""
+        cancel_lis, offload_lis = self.pool.evictable_suffix(sid, blocks)
+        assert len(cancel_lis) + len(offload_lis) == blocks, \
+            f"accounting evicted {blocks} but only " \
+            f"{len(cancel_lis) + len(offload_lis)} evictable ({sid})"
+        if cancel_lis:
+            dropped = self.transfer.cancel_reload_pages(sid, cancel_lis)
+            assert dropped == len(cancel_lis), (sid, cancel_lis)
+            self.pool.cancel_loading(sid, cancel_lis)
+        if offload_lis:
+            self.pool.mark_offloading(sid, offload_lis)
+            self.transfer.submit_offload(sid, offload_lis)
+            if not self.async_transfers:
+                self.transfer.drain(self.clock.now(),
+                                    kinds=("offload",))
+        self.offload_events.append((self.clock.now(), sid, blocks))
         self._sync_page_counts(sid)
 
-    def _reload_pages(self, sid: str, blocks: int) -> None:
-        """KVManager reload hook: bring offloaded pages back, bit-exact."""
+    def _reload_pages(self, sid: str, blocks: int, *, background: bool,
+                      transfer=None) -> None:
+        """KVManager reload hook: queue the offloaded pages as chunked
+        host->device transfers. In-flight offloads cancel for free
+        (copy-then-free); slots for the rest are reserved now (the
+        pool's ``loading`` marks), contents land as chunks drain — or
+        at turn-start settlement for the on-path remainder."""
+        cancelled = self.pool.cancel_offloading(sid)
+        if cancelled:
+            self.transfer.cancel_offload_pages(sid, cancelled)
+        # reserving slots may need room the accounting freed but the
+        # copy-then-free plane has not physically drained yet
+        s = self.pool.seq(sid)
+        need = sum(1 for li in s.offloaded if li not in s.loading)
+        self._demand_free_pages(need)
+        lis = self.pool.begin_reload(sid)
+        assert len(lis) + len(cancelled) == blocks, \
+            f"accounting reloaded {blocks} but pool restored " \
+            f"{len(lis)} + cancelled {len(cancelled)} ({sid})"
+        self.transfer.submit_reload(sid, lis, transfer)
+        if not background or not self.async_transfers:
+            # synchronous path: settle immediately; the preloader (or
+            # direct kv.reload caller) reads the split via the ledger
+            self.transfer.finish_session(sid, self.clock.now())
+        self._sync_page_counts(sid)
+
+    def _cancel_reload_pages(self, sid: str) -> int:
+        """KVManager burst-cancel hook: drop the session's queued
+        reload chunks, free their reserved slots (host copies stay
+        authoritative). Returns pages cancelled."""
+        dropped = self.transfer.cancel_reload_pages(sid)
+        if dropped:
+            lis = sorted(self.pool.seq(sid).loading)
+            assert len(lis) == dropped, (sid, lis, dropped)
+            self.pool.cancel_loading(sid, lis)
+            self._sync_page_counts(sid)
+        return dropped
+
+    def _finish_transfers(self, sid: str, now: float):
+        """KVManager settlement hook (turn start): complete the
+        session's queued reload chunks; (on_path_s, off_path_s)."""
+        self.transfer.finish_session(sid, now)
+        return self.transfer.pop_split(sid)
+
+    # ------------------------------------------------------ transfer io
+    def _io_reload_chunk(self, sid: str, lis: List[int]) -> None:
+        """Physically land one reload chunk. The host stack is staged
+        to the device and *only that buffer* is blocked on for the
+        wall-time measurement — blocking on the whole page store would
+        over-synchronize unrelated decode work (ISSUE 4 satellite)."""
+        s = self.pool.seq(sid)
+        host = np.stack([s.offloaded[li] for li in lis])
         t0 = time.perf_counter()
-        store, loaded = self.pool.reload(
-            sid, LayerStackedPages(self.k_pages, self.v_pages))
+        if self.layout is not None:
+            staged = self.layout.stage_host_chunk(host)
+        else:
+            staged = jnp.asarray(host)
+        jax.block_until_ready(staged)
+        self.reload_wall_s.append(time.perf_counter() - t0)
+        store = self.pool.complete_reload(
+            sid, lis, LayerStackedPages(self.k_pages, self.v_pages),
+            staged=staged)
         self.k_pages, self.v_pages = store.k, store.v
         self._place_pages()
-        jax.block_until_ready(self.k_pages)
-        self.reload_wall_s.append(time.perf_counter() - t0)
-        assert loaded == blocks, \
-            f"accounting reloaded {blocks} but pool held {loaded} ({sid})"
         self._sync_page_counts(sid)
+
+    def _io_offload_chunk(self, sid: str, lis: List[int]) -> None:
+        """Physically land one offload chunk: gather the device pages
+        to host copies, then free the slots (copy-then-free step 2)."""
+        s = self.pool.seq(sid)
+        phys = np.asarray([s.pages[li] for li in lis], np.int64)
+        hk = np.asarray(self.k_pages[:, phys])     # [L, n, page, Hkv, hd]
+        hv = np.asarray(self.v_pages[:, phys])
+        self.pool.complete_offload(
+            sid, {li: np.stack([hk[:, i], hv[:, i]])
+                  for i, li in enumerate(lis)})
+        self._sync_page_counts(sid)
+
+    def drain_transfers(self, max_chunks: Optional[int] = None) -> int:
+        """Complete up to ``max_chunks`` queued transfer chunks (both
+        directions, FIFO). run_round calls this with the per-round
+        budget; the gateways call it from their idle loops so preloads
+        progress even when nothing is decoding."""
+        return self.transfer.drain(self.clock.now(), max_chunks)
+
+    def flush_transfers(self) -> int:
+        """Drain everything (tests / shutdown)."""
+        return self.transfer.drain(self.clock.now(), None)
+
+    def _demand_free_pages(self, need: int) -> None:
+        """Allocation needs physical slots the accounting already freed:
+        complete queued offload chunks until the pool can satisfy it."""
+        self.transfer.drain_offloads_until(
+            self.clock.now(), lambda: self.pool.free_pages >= need)
 
     def _grow(self, sid: str, token_capacity: int, *,
               best_effort: bool = False) -> bool:
@@ -300,12 +420,20 @@ class PagedRealtimeEngine:
             return True
         now = self.clock.now()
         if best_effort and (self.kv.free_blocks < need
-                            or self.pool.free_pages < need):
+                            or self.pool.free_pages
+                            + self.transfer.pending_offload_pages()
+                            < need):
             return False
         if not self.kv.try_allocate_working(need, now):
             raise OutOfPages(
                 f"{sid}: need {need} pages, {self.kv.free_blocks} free "
                 "and nothing evictable")
+        # accounting freed the blocks; copy-then-free may still hold the
+        # physical slots until its chunks drain — demand them now
+        self._demand_free_pages(need)
+        if best_effort and self.pool.free_pages < need:
+            self.kv.release_working(need)     # undo the allocation above
+            return False
         self.pool.ensure_capacity(sid, token_capacity)
         return True
 
@@ -373,6 +501,7 @@ class PagedRealtimeEngine:
         self.sessions[session_id] = sess
         sess.turn_arrival = self.clock.now()
         sess.reload_stall_s = 0.0
+        sess.reload_off_path_s = 0.0
         return sess
 
     def _prep_next_turn(self, session_id: str) -> PagedSession:
@@ -387,12 +516,28 @@ class PagedRealtimeEngine:
         # victim.
         self.kv.pin(session_id)
         stall = self.preloader.on_turn_ready(session_id, self.clock.now())
-        if self.pool.seq(session_id).offloaded:
+        # the accounting view (dram blocks), not the host-copy dict, is
+        # the guard: under copy-then-free a saturated-pool session can
+        # have its suffix still *offloading* (chunks queued, `offloaded`
+        # empty) — starting its turn anyway would let a later round's
+        # FIFO drain move the pages to DRAM mid-decode and crash the
+        # block-table build instead of requeueing recoverably
+        if self.kv.missing_blocks(session_id) > 0:
             self.kv.session(session_id).pinned = False
+            # the settlement that just ran stalled nothing (this turn is
+            # requeued): its seconds carry forward as off-path credit
+            # and its pages reclassify, so the overlap accounting never
+            # drops already-done reload work on a requeue
+            self.preloader.requeue_split(session_id)
+            self.transfer.requeue_settlement(session_id)
             raise OutOfPages(
-                f"{session_id}: pool too saturated to reload "
-                f"{len(self.pool.seq(session_id).offloaded)} offloaded "
-                "pages; keep the turn queued and retry")
+                f"{session_id}: pool too saturated to restore "
+                f"{self.kv.missing_blocks(session_id)} non-resident "
+                "blocks; keep the turn queued and retry")
+        self.transfer.settlement_committed(session_id)
+        assert self.pool.inflight_pages(session_id) == (0, 0) \
+            and not self.pool.seq(session_id).offloaded, \
+            f"{session_id}: turn starting with pages still in flight"
         sess.turn_index += 1
         # the utterance is over once its turn reaches the LLM stage —
         # clear `speaking` or the session stays immediate_reuse forever
@@ -403,6 +548,7 @@ class PagedRealtimeEngine:
         if stall > 0:
             self.clock.tick(stall)          # on-path sync reload residual
         sess.reload_stall_s = stall
+        _, sess.reload_off_path_s = self.preloader.pop_split(session_id)
         return sess
 
     def _make_request(self, sess: PagedSession, prompt: np.ndarray,
@@ -428,12 +574,14 @@ class PagedRealtimeEngine:
             req.context_len = sess.kv_len
             req.max_new_tokens = max_new_tokens
         req.reload_stall_s = sess.reload_stall_s
+        req.reload_off_path_s = sess.reload_off_path_s
         sess.turn_stats.append({
             "turn": sess.turn_index,
             "context_tokens": req.context_len,
             "prompt_tokens": P,
             "ttft_s": None,                 # set at first output token
             "reload_stall_s": sess.reload_stall_s,
+            "reload_off_path_s": sess.reload_off_path_s,
             "re_prefill_tokens": re_prefill,
             "generated": 0,
             "aborted": False,
@@ -523,6 +671,11 @@ class PagedRealtimeEngine:
         assert all(s is None or s.session_id != session_id
                    for s in self.slot_state.values()), \
             "abort the live turn before ending the session"
+        # drop queued transfer chunks first: release() frees the slots
+        # (including loading reservations) and the host copies, so a
+        # hangup mid-transfer leaks nothing
+        self.transfer.cancel_session(session_id)
+        self.preloader.forget_session(session_id)
         self.pool.release(session_id)
         self.kv.release_session(session_id)
         self.sessions[session_id].ended = True
@@ -575,9 +728,17 @@ class PagedRealtimeEngine:
         ``("prefill", n_prefilled)``, ``("token", tok)`` (playable output
         token, the first of which marks TTFT), ``("finished", n_tokens)``.
         Safe to interleave with ``abort``/``submit_turn`` between calls
-        (asyncio single-thread discipline: never called concurrently)."""
+        (asyncio single-thread discipline: never called concurrently).
+
+        Between decode sub-batches the round drains up to
+        ``transfer_chunks_per_round`` queued transfer chunks — this is
+        where a speech-time preload physically lands while other
+        sessions keep decoding (DESIGN.md §10)."""
         events: Dict[int, List[tuple]] = {i: [] for i in chunks}
+        xfer_budget = self.transfer_chunks_per_round
         for j in range(max(chunks.values(), default=0)):
+            if xfer_budget > 0:
+                xfer_budget -= self.drain_transfers(1)
             feeds = {}
             for i, c in chunks.items():
                 s = self.slot_state[i]
@@ -647,6 +808,8 @@ class PagedRealtimeEngine:
                         r.state = RequestState.FINISHED
                         self._close_turn(i, aborted=False)
                         events[i].append(("finished", r.generated))
+        if xfer_budget > 0:
+            self.drain_transfers(xfer_budget)
         return events
 
     def _run_rows(self, feeds: Dict[int, tuple]) -> Dict[int, np.ndarray]:
@@ -709,8 +872,27 @@ class PagedRealtimeEngine:
                  if p >= 0]
         assert len(owned) == len(set(owned)), "double-owned page"
         assert len(owned) + self.pool.free_pages == self.num_pages
-        assert self.kv.used_blocks == len(owned), \
-            f"accounting {self.kv.used_blocks} != physical {len(owned)}"
+        # copy-then-free: an offloading page is accounting-evicted but
+        # physically still owned until its chunk drains
+        offloading = sum(len(s.offloading)
+                         for s in self.pool.seqs.values())
+        assert self.kv.used_blocks == len(owned) - offloading, \
+            f"accounting {self.kv.used_blocks} != physical " \
+            f"{len(owned)} - offloading {offloading}"
+        # per-session page-state conservation (the ISSUE 4 property):
+        # resident + in-flight + offloaded == committed, disjointly
+        for sid, s in self.pool.seqs.items():
+            resident = sum(1 for li, p in enumerate(s.pages)
+                           if p >= 0 and li not in s.loading
+                           and li not in s.offloading)
+            assert s.loading.isdisjoint(s.offloading), sid
+            assert all(li in s.offloaded for li in s.loading), sid
+            pure_off = len(s.offloaded) - len(s.loading)
+            assert resident + len(s.loading) + len(s.offloading) \
+                + pure_off == len(s.pages), \
+                f"{sid}: page states do not partition the page list"
+        # ledger <-> pool bijection (queued chunks match the marks)
+        self.transfer.check(self.pool)
         if self.layout is not None:
             sh = self.layout.page_sharding()
             assert self.k_pages.sharding.is_equivalent_to(sh,

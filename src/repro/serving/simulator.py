@@ -334,6 +334,9 @@ class Simulation:
         stall = self.preloaders["thinker"].on_turn_ready(s.session_id, now)
         stall += self.preloaders["talker"].on_turn_ready(s.session_id, now)
         rec.reload_stall_s = stall
+        rec.reload_off_path_s = sum(
+            pre.pop_split(s.session_id)[1]
+            for pre in self.preloaders.values())
         prompt = turn.prompt_len
         recompute = self.kvs["thinker"].recompute_tokens(s.session_id)
         if recompute:

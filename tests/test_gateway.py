@@ -179,6 +179,7 @@ def test_gateway_barge_in_and_next_turn(tiny):
 
 
 # ------------------------------------------------- soak (ISSUE 3)
+@pytest.mark.slow
 def test_gateway_soak_barge_storm(tiny):
     """16 concurrent sessions with seeded barge-in storms at high tempo:
     engine invariants hold after *every* round, no slot or page leaks

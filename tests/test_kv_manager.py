@@ -126,6 +126,28 @@ def test_heap_and_scan_select_identical_victims():
     assert results["heap"] == results["scan"]
 
 
+def test_heap_reseeds_after_protection_ttl_lapses():
+    """Regression (ISSUE 4): a session protected at preload time whose
+    every subsequent refresh happened while still protected used to
+    leave only stale heap entries behind — heap-mode eviction then
+    never found it again even though it was evictable. The eviction
+    pass must re-seed such sessions."""
+    clock = FakeClock(0.0)
+    mon = mon_with_playback(clock, {"a": (0.0, 1.0)})
+    kv, _ = mk(capacity=100, monitor=mon, clock=clock)
+    add_session(kv, "a", 8)
+    kv.evict(0, 0.0)                    # seeds the heap with a
+    kv.protect("a", 0.0)                # TTL protection (preload path)
+    # refresh while protected: evictable==0, so nothing is pushed and
+    # the pop below leaves no live entry for a
+    kv.refresh_session("a", 1.0)
+    assert kv.evict(2, 1.0) == 0        # protected: correctly spared
+    clock.t = kv.protect_ttl_s + 1.0
+    freed = kv.evict(2, clock.t)        # TTL lapsed: must find a again
+    assert freed == 2
+    assert kv.session("a").hbm_blocks == 6
+
+
 @settings(max_examples=100, deadline=None)
 @given(
     blocks=st.lists(st.integers(1, 20), min_size=2, max_size=15),

@@ -161,7 +161,12 @@ def test_evict_reload_bit_exact_across_turn(tiny):
             now = eng.clock.now()
             assert eng.kv.evict(2, now) == 2      # physical via hook
             seq = eng.pool.seq("a")
-            assert len(seq.offloaded) == 2
+            # copy-then-free: the pages stay usable until the chunked
+            # device->host copy drains; flush to make the host copies
+            # durable before another session clobbers the slots
+            assert len(seq.offloading) + len(seq.offloaded) == 2
+            eng.flush_transfers()
+            assert len(seq.offloaded) == 2 and not seq.offloading
             snapshot = {li: np.array(c) for li, c in seq.offloaded.items()}
             # clobber the freed pages with a second session
             eng.add_session("b", pb, max_new_tokens=2)
@@ -208,9 +213,15 @@ def test_speech_preload_reloads_before_turn(tiny):
                     max_new_tokens=6)
     eng.run_to_completion()
     assert eng.kv.evict(2, eng.clock.now()) == 2
+    eng.flush_transfers()                      # copies now durably in DRAM
     assert len(eng.pool.seq("a").offloaded) == 2
     eng.user_speech_start("a", expected_dur_s=2.0)
-    assert not eng.pool.seq("a").offloaded     # reloaded at trigger time
+    # async plane: admission reserves the slots and queues the chunks
+    # (ledger in-flight); the bytes land across rounds/idle drains or,
+    # at the latest, at turn-start settlement — with zero stall here,
+    # because the modeled DMA finishes well inside the 2 s utterance
+    assert eng.pool.inflight_pages("a") == (2, 0)
+    assert eng.transfer.pending_reload_pages("a") == 2
     eng.clock.tick(2.0)                        # utterance completes
     eng.start_turn("a", rng.integers(0, cfg.vocab_size, size=4),
                    max_new_tokens=4)
