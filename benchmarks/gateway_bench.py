@@ -84,4 +84,24 @@ def run(quick: bool = False) -> dict:
         f"mean_stall_us={fmt(s['mean_reload_stall'] * 1e6, 1)};"
         f"mean_off_us={fmt(s['mean_reload_off_path'] * 1e6, 1)};"
         f"turns={s['turns']}")
+
+    # long-prompt TTFT (ISSUE 5): tail first-audio when every prompt is
+    # an order of magnitude longer than an utterance transcript — the
+    # end-to-end number the fused one-launch chunked prefill
+    # (DESIGN.md §11) moves. The 96-token clamp bites: interactive
+    # trace prompts draw lognormal(median 120).
+    gw = build_gateway(policy="liveserve", scale=4.0, model=model,
+                       frontier_cap_s=3.0, round_token_budget=16,
+                       prefill_chunk=16, pages_per_seq=16,
+                       audio_per_token_s=apt)
+    m, gw = run_gateway_workload(
+        policy="liveserve", sessions=2 if quick else 4, barge_in=0.0,
+        seed=2, rate_rps=2.0, max_turns=1, max_prompt=96,
+        max_response=4, gateway=gw, timeout_s=600)
+    s = m.summary()
+    out["long_prompt"] = s
+    row("gateway/long_prompt_ttfp", s["p90_ttfp"] * 1e6,
+        f"p50_ttfp_us={fmt(s['p50_ttfp'] * 1e6, 1)};"
+        f"turns={s['turns']};max_prompt=96;"
+        f"fused_launches={gw.engine.fused_launches}")
     return out

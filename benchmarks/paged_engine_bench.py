@@ -108,7 +108,55 @@ def run(quick: bool = False) -> None:
     row("paged_engine/reload_per_page", us_page,
         f"pages={reloaded};evicted={freed};page_kb={page_kb:.1f}")
 
+    _fused_prefill_section(cfg, params, quick)
     _overlap_section(cfg, params, quick)
+
+
+def _fused_prefill_section(cfg, params, quick: bool) -> None:
+    """Fused vs per-token chunked prefill (DESIGN.md §11, the ISSUE 5
+    acceptance row): the same long prompt is teacher-forced through
+    ``run_round`` under identical 16-token chunk grants on both planes.
+    The fused plane runs each grant as ONE jitted launch; the per-token
+    control pays one launch per prompt token — the measured tokens/s
+    gap is the point of the fused refactor."""
+    from repro.core.session import Phase
+    from repro.serving.paged_engine import PagedRealtimeEngine
+
+    rng = np.random.default_rng(2)
+    P = 64 if quick else 128
+    chunk = 16
+    prompt = rng.integers(0, cfg.vocab_size, size=P)
+    stats = {}
+    for fused in (True, False):
+        eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=16,
+                                  pages_per_seq=16, fused_step=fused)
+        # a throwaway turn warms every compiled shape outside the
+        # timed window (Q=chunk and Q=1 buckets on the fused plane)
+        warm = eng.submit_turn(
+            "warm", rng.integers(0, cfg.vocab_size, size=chunk),
+            max_new_tokens=2)
+        while eng.active():
+            eng.run_round({warm: chunk})
+        slot = eng.submit_turn("s", prompt, max_new_tokens=2)
+        launches0 = eng.fused_launches
+        t0 = time.perf_counter()
+        rounds = 0
+        while eng.slot_state[slot].request.phase == Phase.PREFILL:
+            eng.run_round({slot: chunk})
+            rounds += 1
+        wall = time.perf_counter() - t0
+        eng.check_invariants()
+        name = "fused" if fused else "tokenwise"
+        stats[name] = P / wall
+        launches = (eng.fused_launches - launches0) if fused \
+            else P                       # one jitted launch per token
+        row(f"paged_engine/prefill_{name}", wall / P * 1e6,
+            f"tokens_s={P / wall:.0f};prompt={P};chunk={chunk};"
+            f"rounds={rounds};launches={launches}")
+    row("paged_engine/prefill_fused_speedup",
+        (1.0 / stats["tokenwise"] - 1.0 / stats["fused"]) * 1e6,
+        f"fused_over_tokenwise={stats['fused'] / stats['tokenwise']:.2f};"
+        f"prompt={P};chunk={chunk}")
 
 
 def _overlap_section(cfg, params, quick: bool) -> None:

@@ -40,7 +40,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.kernels.flash_prefill import flash_prefill
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import paged_attention, \
+    paged_prefill_attention
 
 
 class PagedKVLayout:
@@ -159,6 +160,80 @@ class PagedKVLayout:
         return paged_attention(q, kc, vc, block_tables, seq_lens,
                                interpret=interpret)
 
+    # ------------------------------------------------- fused chunk plane
+    def write_chunk(self, kc, vc, k, v, write_pages, write_slots):
+        """Per-shard page write of a whole round's token chunks
+        (DESIGN.md §11).
+
+        Runs *inside* shard_map: ``kc``/``vc`` are local shards
+        [P+1, page_local, Hkv_local, hd]; ``k``/``v`` [B, Q, Hkv, hd]
+        are the full (replicated) projections; ``write_pages``/
+        ``write_slots`` [B, Q] i32 are global coordinates.
+        """
+        if self.kind == "heads":
+            idx = jax.lax.axis_index("model")
+            hloc = kc.shape[2]
+            k = jax.lax.dynamic_slice_in_dim(k, idx * hloc, hloc, axis=2)
+            v = jax.lax.dynamic_slice_in_dim(v, idx * hloc, hloc, axis=2)
+            return (kc.at[write_pages, write_slots].set(k),
+                    vc.at[write_pages, write_slots].set(v))
+        if self.kind == "slots":
+            # tokens another shard owns are redirected to the scratch
+            # page (the store's last physical page) instead of the
+            # single-token plane's where-keep write-back: a chunk longer
+            # than page_local would otherwise write back a *stale* copy
+            # of the same local (page, slot) an owned token targets in
+            # the same scatter, and duplicate-index resolution order is
+            # implementation-defined
+            idx = jax.lax.axis_index("model")
+            psl = kc.shape[1]
+            own = (write_slots // psl) == idx
+            loc = write_slots % psl
+            wp = jnp.where(own, write_pages, kc.shape[0] - 1)
+            return kc.at[wp, loc].set(k), vc.at[wp, loc].set(v)
+        return (kc.at[write_pages, write_slots].set(k),
+                vc.at[write_pages, write_slots].set(v))
+
+    def attend_chunk(self, q, kc, vc, block_tables, q_start, q_lens, *,
+                     interpret: bool = False):
+        """Per-shard fused multi-token attention + cross-shard combine.
+
+        Runs *inside* shard_map: ``q`` [B, Q, Hq, D] is the full
+        (replicated) query chunk; ``kc``/``vc`` are local page shards.
+        Returns the full [B, Q, Hq, D] attention output, identical on
+        every shard.
+        """
+        if self.kind == "heads":
+            idx = jax.lax.axis_index("model")
+            hq_loc = q.shape[2] // self.M
+            q_loc = jax.lax.dynamic_slice_in_dim(q, idx * hq_loc, hq_loc,
+                                                 axis=2)
+            a = paged_prefill_attention(q_loc, kc, vc, block_tables,
+                                        q_start, q_lens,
+                                        interpret=interpret)
+            return jax.lax.all_gather(a, "model", axis=2, tiled=True)
+        if self.kind == "slots":
+            idx = jax.lax.axis_index("model")
+            psl = kc.shape[1]
+            # the shard's slots sit at global offset idx*psl inside each
+            # page; shifting the *traced* q_start shifts every masking
+            # comparison (causal limit and derived seq_len alike), which
+            # is equivalent to offsetting every local kv position —
+            # pos_offset is static and cannot carry the traced idx
+            o, m, l = paged_prefill_attention(
+                q, kc, vc, block_tables, q_start - idx * psl, q_lens,
+                pos_stride=self.page_size, return_stats=True,
+                interpret=interpret)
+            m_star = jax.lax.pmax(m, "model")          # [B, Q, Hq] f32
+            w = l * jnp.exp(m - m_star)
+            den = jax.lax.psum(w, "model")
+            num = jax.lax.psum(o.astype(jnp.float32) * w[..., None],
+                               "model")
+            a = num / jnp.maximum(den, 1e-30)[..., None]
+            return a.astype(q.dtype)
+        return paged_prefill_attention(q, kc, vc, block_tables, q_start,
+                                       q_lens, interpret=interpret)
+
 
 # ======================================================================
 # shard_map wrappers
@@ -232,6 +307,27 @@ def make_sharded_step(cfg, layout: PagedKVLayout, *,
     f = shard_map(
         body, mesh=layout.mesh,
         in_specs=(rep, rep, rep, spec, spec, rep, rep, rep, rep),
+        out_specs=(rep, spec, spec),
+        check_vma=False)
+    return jax.jit(f)
+
+
+def make_sharded_fused_step(cfg, layout: PagedKVLayout, *,
+                            interpret: bool = False):
+    """The sharded twin of ``serving.paged_engine.paged_fused_step``
+    (DESIGN.md §11): one jitted shard_map over the whole fused round —
+    weights / token chunks / tables / q_start / q_lens replicated in,
+    pages sharded in/out, last-token logits replicated out. Same body,
+    same no-drift argument as ``make_sharded_step``."""
+    from repro.serving.paged_engine import paged_fused_step
+
+    body = functools.partial(paged_fused_step, cfg, interpret=interpret,
+                             plane=layout)
+    spec = layout.page_pspec(with_layers=True)
+    rep = P()
+    f = shard_map(
+        body, mesh=layout.mesh,
+        in_specs=(rep, rep, rep, spec, spec, rep, rep, rep, rep, rep),
         out_specs=(rep, spec, spec),
         check_vma=False)
     return jax.jit(f)

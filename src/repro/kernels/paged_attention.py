@@ -11,16 +11,26 @@ head are processed together as a [G, D] tile.
 
 Grid: (B, Hkv, pages_per_seq) — pages innermost, accumulator in VMEM.
 
-The kernel also runs as one *shard* of a tensor-sharded page store
+``paged_prefill_attention`` is the fused-round variant (DESIGN.md §11):
+each batch row carries a *chunk* of Q consecutive query tokens (a
+prefill chunk, or Q=1 for a decode slot) whose KV was scattered into the
+pages before the call, with per-row ``q_start``/``q_lens`` scalars.
+Causal masking covers both the committed history and the intra-chunk
+positions — query token t of a row attends to global positions
+``<= q_start + t`` — and each of the Q*G query rows keeps its own
+online-softmax accumulator, so one launch serves an entire mixed
+prefill+decode token budget.
+
+Both kernels also run as one *shard* of a tensor-sharded page store
 (DESIGN.md §9): when the 'model' mesh axis splits each page's token
 slots, a shard holds ``page_local = page / M`` slots of every physical
 page, and ``pos_stride``/``pos_offset`` map local slot ``j`` of grid
 page ``p`` back to its global position ``p * pos_stride + pos_offset +
 j`` so the causal/length mask stays exact. ``return_stats`` additionally
 emits the online-softmax running max ``m`` and denominator ``l`` per
-(batch, q-head) so the caller can combine partial softmaxes across
-shards (the standard flash-merge: weight each shard's normalized output
-by ``l_s * exp(m_s - max_s m_s)``).
+(batch[, q-token], q-head) so the caller can combine partial softmaxes
+across shards (the standard flash-merge: weight each shard's normalized
+output by ``l_s * exp(m_s - max_s m_s)``).
 """
 from __future__ import annotations
 
@@ -143,3 +153,140 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
         o, m, l = out
         return (o.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq))
     return out.reshape(B, Hq, D)
+
+
+# ======================================================================
+# fused multi-token queries (one launch per round — DESIGN.md §11)
+# ======================================================================
+def _fused_kernel(block_tables, q_start, q_lens, q_ref, k_ref, v_ref,
+                  *refs, page: int, pages_per_seq: int, scale: float,
+                  pos_stride: int, pos_offset: int, stats: bool,
+                  Q: int, G: int):
+    if stats:
+        o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        o_ref, acc_ref, m_ref, l_ref = refs
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    start = q_start[b]
+    nq = q_lens[b]
+    seq_len = start + nq                 # post-write attention length
+    base = p * pos_stride + pos_offset
+
+    @pl.when(base < seq_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G*Q, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)           # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)           # [page, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        kv_pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # query rows are (g, t) pairs, t minor: row r is token r % Q
+        t_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % Q
+        mask = (kv_pos <= start + t_idx) & (t_idx < nq)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pexp @ v
+        m_ref[...] = m_new
+
+    @pl.when(p == pages_per_seq - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        if stats:
+            m_out_ref[0, 0] = m_ref[...]
+            l_out_ref[0, 0] = l_ref[...]
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, q_start,
+                            q_lens, *, pos_stride: int | None = None,
+                            pos_offset: int = 0,
+                            return_stats: bool = False,
+                            interpret: bool = False):
+    """q [B, Q, Hq, D]; k_pages/v_pages [P, page, Hkv, D];
+    block_tables [B, pages_per_seq] i32; q_start/q_lens [B] i32
+    -> [B, Q, Hq, D].
+
+    Row b's query token t sits at global position ``q_start[b] + t`` and
+    attends causally over positions ``<= q_start[b] + t`` — the
+    committed history plus the chunk prefix, whose KV the caller already
+    scattered into the pages. Tokens ``t >= q_lens[b]`` are padding:
+    fully masked, finite-garbage output, to be discarded (a row with
+    ``q_lens == 0`` computes nothing and returns zeros). ``pos_stride``/
+    ``pos_offset`` remap local page slots to global positions exactly as
+    in ``paged_attention``; a slot-sharded caller shifts the *traced*
+    ``q_start`` by its slot offset instead of passing a traced
+    ``pos_offset``. With ``return_stats`` the result is ``(out, m, l)``
+    with m/l [B, Q, Hq] f32 per query row, enabling the exact
+    cross-shard softmax merge (fully-masked rows report ``m = NEG_INF``
+    — a finite, hugely negative sentinel — so merge weights vanish
+    without NaNs).
+    """
+    B, Q, Hq, D = q.shape
+    num_pages, page, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    pages_per_seq = block_tables.shape[1]
+    if pos_stride is None:
+        pos_stride = page
+    grid = (B, Hkv, pages_per_seq)
+    kernel = functools.partial(
+        _fused_kernel, page=page, pages_per_seq=pages_per_seq,
+        scale=1.0 / math.sqrt(D), pos_stride=pos_stride,
+        pos_offset=pos_offset, stats=return_stats, Q=Q, G=G)
+    # [B, Q, (Hkv, G), D] -> [B, Hkv, G*Q, D]: rows are (g, t), t minor,
+    # so the kernel recovers the token index as row % Q
+    qg = jnp.moveaxis(q.reshape(B, Q, Hkv, G, D), 1, 3) \
+        .reshape(B, Hkv, G * Q, D)
+    out_specs = pl.BlockSpec((1, 1, G * Q, D),
+                             lambda b, h, p, bt, qs, ql: (b, h, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, Hkv, G * Q, D), q.dtype)
+    if return_stats:
+        stat_spec = pl.BlockSpec((1, 1, G * Q),
+                                 lambda b, h, p, bt, qs, ql: (b, h, 0))
+        stat_shape = jax.ShapeDtypeStruct((B, Hkv, G * Q), jnp.float32)
+        out_specs = [out_specs, stat_spec, stat_spec]
+        out_shape = [out_shape, stat_shape, stat_shape]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G * Q, D),
+                         lambda b, h, p, bt, qs, ql: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, p, bt, qs, ql: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, p, bt, qs, ql: (bt[b, p], 0, h, 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((G * Q, D), jnp.float32),
+            pltpu.VMEM((G * Q,), jnp.float32),
+            pltpu.VMEM((G * Q,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_tables, q_start, q_lens, qg, k_pages, v_pages)
+
+    def unpack(x):                        # [B, Hkv, G*Q, ...] -> token-major
+        tail = x.shape[3:]
+        return jnp.moveaxis(x.reshape(B, Hkv, G, Q, *tail), 3, 1) \
+            .reshape(B, Q, Hq, *tail)
+
+    if return_stats:
+        o, m, l = out
+        return unpack(o), unpack(m), unpack(l)
+    return unpack(out)

@@ -65,6 +65,39 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
     return out.reshape(B, Hq, D).astype(q.dtype)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
+                                q_start, q_lens):
+    """Fused multi-token-query attention over paged KV (DESIGN.md §11).
+
+    q [B, Q, Hq, D]; k_pages/v_pages [P, page, Hkv, D];
+    block_tables [B, pages_per_seq] int32; q_start/q_lens [B] int32.
+    Query token t of row b attends causally over global positions
+    <= q_start[b] + t; tokens t >= q_lens[b] are padding (output
+    unspecified — callers discard them; here they are zeroed so the
+    oracle is deterministic).
+    """
+    B, Q, Hq, D = q.shape
+    page = k_pages.shape[1]
+    Hkv = k_pages.shape[2]
+    G = Hq // Hkv
+    pps = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(B, pps * page, Hkv, D)
+    v = v_pages[block_tables].reshape(B, pps * page, Hkv, D)
+    pos = jnp.arange(pps * page)
+    t = jnp.arange(Q)
+    limit = q_start[:, None] + t[None, :]              # [B, Q]
+    valid = pos[None, None, :] <= limit[:, :, None]    # [B, Q, S]
+    valid &= (t[None, :] < q_lens[:, None])[:, :, None]
+    qg = q.reshape(B, Q, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p, v.astype(jnp.float32))
+    out = jnp.where(valid.any(-1)[..., None, None, None], out, 0.0)
+    return out.reshape(B, Q, Hq, D).astype(q.dtype)
+
+
 def ssd_scan_ref(X, dA, B_mat, C_mat, initial_state=None):
     """Sequential (token-by-token) SSD recurrence — the ground truth.
 

@@ -57,6 +57,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     # --engine real | live (the paged data plane)
+    ap.add_argument("--fused-step", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="real/live engines: run each round's whole "
+                         "token budget (prefill chunks + decode) as one "
+                         "jitted launch (DESIGN.md §11). "
+                         "--no-fused-step serves on the per-token "
+                         "differential-control plane")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="real/live engines: shard the paged KV plane "
                          "over a ('data','model') mesh, e.g. 1x8 "
@@ -88,6 +95,10 @@ def main() -> None:
     if args.engine == "sim" and args.mesh is not None:
         ap.error("--mesh shards the real paged data plane; the simulator "
                  "models costs, not placement (use --engine real|live)")
+    if args.engine == "sim" and not args.fused_step:
+        ap.error("--no-fused-step selects the paged data plane's "
+                 "per-token control; the simulator has no data plane "
+                 "(use --engine real|live)")
     mesh = None
     if args.mesh is not None:
         from repro.launch.mesh import make_serving_mesh
@@ -110,7 +121,7 @@ def main() -> None:
                 f"simulation)")
         from repro.serving.paged_engine import run_multiturn_demo
         out = run_multiturn_demo(
-            seed=args.seed, mesh=mesh,
+            seed=args.seed, mesh=mesh, fused_step=args.fused_step,
             log=(lambda *_a, **_k: None) if args.json else print)
         if args.json:
             print(json.dumps(out, indent=1, default=str))
@@ -146,6 +157,7 @@ def main() -> None:
             num_pages=args.kv_pages, mesh=mesh,
             preload_chunks=(args.preload_chunks
                             if args.preload_chunks is not None else 1),
+            fused_step=args.fused_step,
             frontier_cap_s=3.0 if system == "liveserve" else None)
         s = m.summary()
         s["rounds"] = gw.rounds

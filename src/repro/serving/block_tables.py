@@ -81,6 +81,75 @@ def assemble(pool: PagedPool, rows: List[Optional[Tuple[str, int]]],
                        active)
 
 
+@dataclass
+class FusedBatchTables:
+    """One fused round's kernel inputs (DESIGN.md §11): every batch row
+    carries up to Q consecutive tokens of one sequence."""
+    block_tables: np.ndarray     # [B, pages_per_seq] i32 physical pages
+    q_start: np.ndarray          # [B] i32 first token's absolute position
+    q_lens: np.ndarray           # [B] i32 valid tokens this row (0 = pad)
+    positions: np.ndarray        # [B, Q] i32 absolute position per token
+    write_pages: np.ndarray      # [B, Q] i32 physical page per token
+    write_slots: np.ndarray      # [B, Q] i32 slot within that page
+
+
+def assemble_fused(pool: PagedPool,
+                   rows: List[Optional[Tuple[str, int, int]]], q_tokens: int,
+                   pages_per_seq: int, scratch_page: int) -> FusedBatchTables:
+    """Build the tables for one fused round.
+
+    ``rows[i]`` is ``(seq_id, tokens_written, n_tokens)`` — the session
+    served by batch row i feeds ``n_tokens`` consecutive tokens starting
+    at absolute position ``tokens_written`` — or None for a padding row.
+    ``q_tokens`` is the (bucketed) query-axis width; token slots past
+    ``n_tokens`` and whole padding rows point at ``scratch_page`` with
+    ``q_lens`` masking them out of attention, so their lanes compute
+    finite garbage that is discarded and real pages are never clobbered.
+
+    Every active sequence must be fully HBM-resident and must already
+    own every page its chunk writes into (the caller grew the sequence
+    for the whole grant before packing — the §5.2 contract unchanged).
+    """
+    B = len(rows)
+    bt = np.full((B, pages_per_seq), scratch_page, np.int32)
+    q_start = np.zeros((B,), np.int32)
+    q_lens = np.zeros((B,), np.int32)
+    positions = np.zeros((B, q_tokens), np.int32)
+    write_pages = np.full((B, q_tokens), scratch_page, np.int32)
+    # padded token slots spread over the scratch page so one launch's
+    # scatter has as few duplicate targets as possible (their contents
+    # are garbage either way; nothing ever attends to them)
+    write_slots = np.tile(np.arange(q_tokens, dtype=np.int32)[None, :]
+                          % max(1, pool.page_size), (B, 1))
+    for i, row in enumerate(rows):
+        if row is None:
+            continue
+        sid, written, n_tok = row
+        assert 0 < n_tok <= q_tokens, (sid, n_tok, q_tokens)
+        s = pool.seq(sid)
+        if s.offloaded:
+            raise RuntimeError(
+                f"{sid} has offloaded pages; reload before scheduling")
+        n = len(s.pages)
+        if n > pages_per_seq:
+            raise ValueError(f"{sid}: {n} pages > table width "
+                             f"{pages_per_seq}")
+        bt[i, :n] = s.pages
+        q_start[i] = written
+        q_lens[i] = n_tok
+        pos = written + np.arange(n_tok)
+        page_idx = pos // pool.page_size
+        if page_idx[-1] >= n:
+            raise RuntimeError(
+                f"{sid}: page {page_idx[-1]} for token {pos[-1]} not "
+                f"allocated (owns {n})")
+        positions[i, :n_tok] = pos
+        write_pages[i, :n_tok] = np.asarray(s.pages, np.int64)[page_idx]
+        write_slots[i, :n_tok] = pos % pool.page_size
+    return FusedBatchTables(bt, q_start, q_lens, positions, write_pages,
+                            write_slots)
+
+
 class LayerStackedPages:
     """Adapts layer-major K/V page arrays ([L, P, page, Hkv, hd], the
     scan-friendly layout the decode step wants) to the PagedPool's

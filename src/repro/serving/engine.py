@@ -47,7 +47,10 @@ def schedule_round(scheduler, kv, clock, slot_state, act, token_budget, *,
                    block_size: int = 16):
     """One admission round, shared by both engines: free KV plus
     reclaimable idle KV (eviction frees it on demand) against the token
-    budget. Returns the scheduled slot ids."""
+    budget. Returns (scheduled slot ids, per-slot token grants) — the
+    scheduler's ``chunk_for`` decision, so a PREFILL slot's chunk grant
+    survives the trip through the self-scheduled path (the dense engine
+    ignores the grants; its slots are always DECODE)."""
     budget = RoundBudget(
         token_budget=token_budget,
         free_kv_blocks=kv.free_blocks
@@ -55,9 +58,12 @@ def schedule_round(scheduler, kv, clock, slot_state, act, token_budget, *,
         block_size=block_size)
     decision = scheduler.schedule([s.request for s in act], budget,
                                   clock.now())
-    sched_ids = {r.req_id for r in decision.batch}
-    return [i for i, s in slot_state.items()
-            if s and s.request.req_id in sched_ids]
+    sched_ids = {r.req_id: decision.chunks[r.req_id]
+                 for r in decision.batch}
+    slots = [i for i, s in slot_state.items()
+             if s and s.request.req_id in sched_ids]
+    return slots, {i: sched_ids[slot_state[i].request.req_id]
+                   for i in slots}
 
 
 class RealtimeLLMEngine:
@@ -149,8 +155,9 @@ class RealtimeLLMEngine:
         act = self.active()
         if not act:
             return []
-        sched_slots = schedule_round(self.scheduler, self.kv, self.clock,
-                                     self.slot_state, act, self.slots)
+        sched_slots, _ = schedule_round(self.scheduler, self.kv,
+                                        self.clock, self.slot_state, act,
+                                        self.slots)
         if not sched_slots:
             return []
         tokens = jnp.asarray(

@@ -51,8 +51,13 @@ from repro.serving.metrics import Metrics, TurnRecord
 class GatewayConfig:
     policy: str = "liveserve"            # liveserve | fcfs
     audio_per_token_s: float = 0.08      # playable audio per output token
-    round_token_budget: int = 4          # Algorithm 1 per-round budget
-    prefill_chunk: int = 4               # prompt tokens per granted round
+    # Algorithm 1 per-round budget / prompt tokens per granted round.
+    # Retuned for the fused data plane (DESIGN.md §11): a 16-token
+    # prefill chunk costs one launch, not 16, so chunks are sized for
+    # scheduling granularity alone (the pre-fused default was 4 only
+    # because a chunk cost C sequential launches).
+    round_token_budget: int = 16
+    prefill_chunk: int = 16
     # hard generation cap beyond the playback frontier (seconds of client
     # buffer). None = rely on the scheduler's pacing class alone; set it
     # to enforce the cap even under the KV-pressure pacing override.

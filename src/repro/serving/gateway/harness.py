@@ -34,38 +34,60 @@ def tiny_model(seed: int = 0, vocab: int = 331) -> Tuple[object, dict]:
     return cfg, init_params(cfg, jax.random.PRNGKey(seed))
 
 
-def _warm_engine(eng) -> None:
+def _warm_engine(eng, prefill_chunk: int = 1) -> None:
     """Compile the fixed-shape paged step before the clock starts: a
     padded all-scratch round exercises the exact signature every serving
-    round uses, so multi-second jit time never lands in TTFP."""
+    round uses, so multi-second jit time never lands in TTFP. On the
+    fused plane this warms every query-axis bucket up to the gateway's
+    prefill chunk (the fused step compiles one executable per power-of-
+    two bucket — DESIGN.md §11)."""
+    from repro.serving.paged_engine import _q_bucket
     B = eng.slots
     scratch = np.full((B,), eng.scratch_page, np.int32)
-    out = eng._step_fn(
-        eng.params, jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
-        eng.k_pages, eng.v_pages,
-        jnp.full((B, eng.pages_per_seq), eng.scratch_page, jnp.int32),
-        jnp.ones((B,), jnp.int32), jnp.asarray(scratch),
-        jnp.zeros((B,), jnp.int32))
-    jax.block_until_ready(out[0])            # scratch-page writes only
+    if not eng.fused_step:
+        out = eng._step_fn(
+            eng.params, jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.int32), eng.k_pages, eng.v_pages,
+            jnp.full((B, eng.pages_per_seq), eng.scratch_page, jnp.int32),
+            jnp.ones((B,), jnp.int32), jnp.asarray(scratch),
+            jnp.zeros((B,), jnp.int32))
+        jax.block_until_ready(out[0])        # scratch-page writes only
+        return
+    q = 1
+    while True:
+        out = eng._fused_fn(
+            eng.params, jnp.zeros((B, q), jnp.int32),
+            jnp.zeros((B, q), jnp.int32), eng.k_pages, eng.v_pages,
+            jnp.full((B, eng.pages_per_seq), eng.scratch_page, jnp.int32),
+            jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+            jnp.full((B, q), eng.scratch_page, jnp.int32),
+            jnp.tile(jnp.arange(q, dtype=jnp.int32) % eng.page_size,
+                     (B, 1)))
+        jax.block_until_ready(out[0])        # scratch-page writes only
+        if q >= _q_bucket(prefill_chunk):
+            break
+        q *= 2
 
 
 def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                   slots: int = 8, page_size: int = 8,
                   pages_per_seq: int = 8, num_pages: Optional[int] = None,
                   audio_per_token_s: float = 0.25,
-                  round_token_budget: int = 4, prefill_chunk: int = 4,
+                  round_token_budget: int = 16, prefill_chunk: int = 16,
                   frontier_cap_s: Optional[float] = None,
                   sched_cfg: Optional[SchedulerConfig] = None,
                   model: Optional[tuple] = None,
                   mesh=None, seed: int = 0,
-                  preload_chunks: int = 1) -> RealtimeGateway:
+                  preload_chunks: int = 1,
+                  fused_step: bool = True) -> RealtimeGateway:
     """``mesh``: a ('data','model') jax mesh shards the engine's page
     store over 'model' (DESIGN.md §9) — on a laptop run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
     virtual host-platform mesh; everything above the engine is
     mesh-agnostic. ``preload_chunks``: transfer chunks each round may
     drain between decode sub-batches (the serve flag of the same name;
-    DESIGN.md §10)."""
+    DESIGN.md §10). ``fused_step=False`` serves on the per-token
+    differential-control plane (one launch per token — DESIGN.md §11)."""
     from repro.serving.paged_engine import PagedRealtimeEngine
     cfg, params = model if model is not None else tiny_model(seed)
     clock = ScaledWallClock(scale)
@@ -74,8 +96,9 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                               pages_per_seq=pages_per_seq,
                               num_pages=num_pages, clock=clock,
                               mesh=mesh,
-                              transfer_chunks_per_round=preload_chunks)
-    _warm_engine(eng)
+                              transfer_chunks_per_round=preload_chunks,
+                              fused_step=fused_step)
+    _warm_engine(eng, min(prefill_chunk, round_token_budget))
     gw = RealtimeGateway(eng, cfg=GatewayConfig(
         policy=policy, audio_per_token_s=audio_per_token_s,
         round_token_budget=round_token_budget,

@@ -51,13 +51,14 @@ from repro.core.preload import SpeechPreloader
 from repro.core.scheduler import SchedulerConfig, UrgencyScheduler
 from repro.core.session import Phase, Request, RequestState
 from repro.core.transfer_engine import TransferEngine
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import paged_attention, \
+    paged_prefill_attention
 from repro.kvcache.paged import OutOfPages, PagedPool
 from repro.models import init_cache, prefill
 from repro.models import layers as L
 from repro.models.model import _embed, _logits, _mlp_block
-from repro.serving.block_tables import BatchTables, LayerStackedPages, \
-    assemble
+from repro.serving.block_tables import BatchTables, FusedBatchTables, \
+    LayerStackedPages, assemble, assemble_fused
 from repro.serving.engine import RoundLimitExceeded, _StepClock, \
     schedule_round
 
@@ -114,6 +115,65 @@ def paged_decode_step(cfg, params, tokens, positions, k_pages, v_pages,
     return _logits(cfg, params, x)[:, 0], k_pages, v_pages
 
 
+def paged_fused_step(cfg, params, tokens, positions, k_pages, v_pages,
+                     block_tables, q_start, q_lens, write_pages,
+                     write_slots, *, interpret: bool = False, plane=None):
+    """One fused round: up to Q consecutive tokens per batch row through
+    the paged KV store in a single launch (DESIGN.md §11).
+
+    tokens/positions/write_pages/write_slots [B, Q] i32;
+    q_start/q_lens [B] i32 (first absolute position / valid tokens per
+    row — 0 marks a padding row); k_pages/v_pages [L, P+1, page, Hkv,
+    hd]; block_tables [B, pps] i32. Returns (logits [B, V] of each
+    row's *last valid* token, k_pages, v_pages).
+
+    Per layer the whole chunk's K/V is scattered into the pages first,
+    then every query token attends causally over history + chunk prefix
+    via ``paged_prefill_attention`` — so a PREFILL slot's C-token grant
+    and every DECODE slot's single token share one compiled step.
+    ``plane`` swaps the write/attend strategy exactly as in
+    ``paged_decode_step`` (None = single device; a ``PagedKVLayout``
+    makes this the per-shard body of a shard_map — same code path, so
+    sharded and unsharded engines cannot drift).
+    """
+    x = _embed(cfg, params, tokens)                     # [B, Q, d]
+
+    def body(carry, xs):
+        lp, kc, vc = xs
+        h = L.rms_norm(carry, lp["ln1"], cfg.rms_eps)
+        q, k, v = L.attn_project_qkv(lp["attn"], cfg, h, positions)
+        if plane is None:
+            kc = kc.at[write_pages, write_slots].set(k)
+            vc = vc.at[write_pages, write_slots].set(v)
+            a = paged_prefill_attention(q, kc, vc, block_tables,
+                                        q_start, q_lens,
+                                        interpret=interpret)
+        else:
+            kc, vc = plane.write_chunk(kc, vc, k, v, write_pages,
+                                       write_slots)
+            a = plane.attend_chunk(q, kc, vc, block_tables, q_start,
+                                   q_lens, interpret=interpret)
+        h = carry + L.attn_output(lp["attn"], a)
+        h, _ = _mlp_block(cfg, lp, h, None)
+        return h, (kc, vc)
+
+    npre = len(params.get("layers_pre", []))
+    for i, lp in enumerate(params.get("layers_pre", [])):
+        x, (kc, vc) = body(x, (lp, k_pages[i], v_pages[i]))
+        k_pages = k_pages.at[i].set(kc)
+        v_pages = v_pages.at[i].set(vc)
+    x, (kcs, vcs) = jax.lax.scan(
+        body, x, (params["layers"], k_pages[npre:], v_pages[npre:]))
+    k_pages = jnp.concatenate([k_pages[:npre], kcs]) if npre else kcs
+    v_pages = jnp.concatenate([v_pages[:npre], vcs]) if npre else vcs
+    # only each row's last valid token's logits are consumed (the next
+    # decode token / first output token); slice before the unembed so
+    # the launch never materializes [B, Q, V]
+    last = jnp.maximum(q_lens - 1, 0)
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    return _logits(cfg, params, xl)[:, 0], k_pages, v_pages
+
+
 # one jitted step per (config, interpret, mesh layout) shared across
 # engine instances — a policy-comparison harness (gateway liveserve vs
 # fcfs on the same model) pays the XLA compile once, not per engine.
@@ -125,15 +185,20 @@ _STEP_FN_CACHE: Dict[tuple, tuple] = {}
 _STEP_FN_CACHE_MAX = 8
 
 
-def _jitted_step(cfg, interpret: bool, layout=None):
+def _jitted_step(cfg, interpret: bool, layout=None, *,
+                 fused: bool = False):
     lkey = None if layout is None else (layout.mesh, layout.kind,
                                         layout.page_size)
-    key = (id(cfg), interpret, lkey)
+    key = (id(cfg), interpret, lkey, fused)
     hit = _STEP_FN_CACHE.pop(key, None)
     if hit is None:
         if layout is None:
-            fn = jax.jit(functools.partial(paged_decode_step, cfg,
+            body = paged_fused_step if fused else paged_decode_step
+            fn = jax.jit(functools.partial(body, cfg,
                                            interpret=interpret))
+        elif fused:
+            from repro.distributed.paged import make_sharded_fused_step
+            fn = make_sharded_fused_step(cfg, layout, interpret=interpret)
         else:
             from repro.distributed.paged import make_sharded_step
             fn = make_sharded_step(cfg, layout, interpret=interpret)
@@ -142,6 +207,13 @@ def _jitted_step(cfg, interpret: bool, layout=None):
     while len(_STEP_FN_CACHE) > _STEP_FN_CACHE_MAX:
         _STEP_FN_CACHE.pop(next(iter(_STEP_FN_CACHE)))
     return hit[1]
+
+
+def _q_bucket(n: int) -> int:
+    """Round a round's query-axis width up to a power of two so the
+    fused step compiles O(log max_chunk) executables, not one per
+    distinct grant size."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
 # ======================================================================
@@ -183,7 +255,8 @@ class PagedRealtimeEngine:
                  interpret: Optional[bool] = None, mesh=None,
                  async_transfers: bool = True,
                  chunk_pages: Optional[int] = None,
-                 transfer_chunks_per_round: int = 1):
+                 transfer_chunks_per_round: int = 1,
+                 fused_step: bool = True):
         assert cfg.family in ("dense", "moe", "vlm") and cfg.mla is None \
             and cfg.sliding_window is None, \
             "paged engine serves global-attention KV families"
@@ -248,9 +321,13 @@ class PagedRealtimeEngine:
             pending_offload=self.transfer.pending_offload_pages)
         self.preloader = SpeechPreloader(self.kv, self.monitor,
                                          enabled=preload)
+        # prefill_chunk clamps to the self-scheduled round budget
+        # (= slots tokens) exactly as the gateway clamps its own — a
+        # bigger chunk could never be admitted (Algorithm 1 head-of-line)
         self.scheduler = scheduler or UrgencyScheduler(
             SchedulerConfig(), self.monitor, stage="thinker",
-            kv_occupancy=self.kv.occupancy)
+            kv_occupancy=self.kv.occupancy,
+            prefill_chunk=max(1, slots))
 
         self.sessions: Dict[str, PagedSession] = {}
         self.slot_state: Dict[int, Optional[PagedSlot]] = {
@@ -258,10 +335,18 @@ class PagedRealtimeEngine:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self._step_fn = _jitted_step(cfg, interpret, self.layout)
+        # the fused token-budget plane (DESIGN.md §11): one launch per
+        # round, C-token prefill chunks included. fused_step=False keeps
+        # the per-token plane as the differential control (the role
+        # async_transfers=False plays for the transfer engine).
+        self.fused_step = fused_step
+        self._fused_fn = _jitted_step(cfg, interpret, self.layout,
+                                      fused=True) if fused_step else None
         # telemetry
         self.reload_wall_s: List[float] = []   # measured host->device time
         self.offload_events: List[tuple] = []
         self.pressure_holds = 0                # feeds held mid-round
+        self.fused_launches = 0                # fused-plane step launches
 
     # ------------------------------------------------------------ pages
     def _place_pages(self) -> None:
@@ -595,7 +680,11 @@ class PagedRealtimeEngine:
         assert slot is not None, "no free decode slot"
         req = self._make_request(sess, prompt, max_new_tokens)
         self._grow(sid, sess.kv_len + req.prompt_len)
-        if first:
+        if self.fused_step:
+            # turn 0 (the former dense-prefill graft) and turn-N
+            # extension share the one fused path (DESIGN.md §11)
+            tok = self._prefill_fused(slot, sess, prompt)
+        elif first:
             tok = self._prefill_dense(sess, prompt)
         else:
             tok = self._prefill_paged(slot, sess, prompt)
@@ -628,17 +717,30 @@ class PagedRealtimeEngine:
         self.clock.tick()
         return int(jnp.argmax(logits[0]))
 
+    def _prefill_fused(self, slot: int, sess: PagedSession,
+                       prompt: np.ndarray) -> int:
+        """Synchronous prefill on the fused plane: the whole prompt is
+        one multi-token launch — turn 0 lands in fresh pages, turn N
+        extends the committed context (never re-prefilled) — and the
+        last token's logits are the first output token."""
+        logits = self._run_chunk_rows(
+            {slot: (sess.session_id,
+                    np.asarray(prompt, np.int32))})[slot]
+        sess.kv_len += int(prompt.shape[0])
+        self.clock.tick()
+        return int(np.argmax(logits))
+
     def _prefill_paged(self, slot: int, sess: PagedSession,
                        prompt: np.ndarray) -> int:
-        """Turn-N extension: teacher-force the new prompt through the
+        """Turn-N extension on the per-token plane (``fused_step=False``
+        differential control): teacher-force the new prompt through the
         paged step so its KV lands behind the committed context — no
         re-prefill of history.
 
         Like the dense engine's add_session, this runs synchronously:
         concurrent decode holds for prompt_len rounds (turn prompts are
-        short utterance transcripts). A chunked paged prefill that
-        shares rounds with decode is the natural next step (DESIGN.md
-        §3)."""
+        short utterance transcripts); the fused plane collapses this to
+        one launch (DESIGN.md §11)."""
         logits = None
         for t in prompt:
             logits = self._run_rows({slot: (sess.session_id, int(t))})[slot]
@@ -700,29 +802,37 @@ class PagedRealtimeEngine:
 
     def step(self) -> List[int]:
         """One self-scheduled round: the engine's own scheduler picks the
-        slots, then one fixed-batch paged decode. Returns scheduled slot
-        ids. (The gateway bypasses this and calls ``run_round`` with its
-        own scheduler's decision — DESIGN.md §4.)"""
+        slots *and their token grants* (``chunk_for`` — a PREFILL slot
+        gets its prefill chunk, a decode slot one token), then one
+        fixed-batch paged round. Returns scheduled slot ids. (The
+        gateway bypasses this and calls ``run_round`` with its own
+        scheduler's decision — DESIGN.md §4.)"""
         self.clock.tick()
         act = self.active()
         if not act:
             return []
-        sched_slots = schedule_round(self.scheduler, self.kv, self.clock,
-                                     self.slot_state, act, self.slots,
-                                     block_size=self.page_size)
+        sched_slots, grants = schedule_round(
+            self.scheduler, self.kv, self.clock, self.slot_state, act,
+            self.slots, block_size=self.page_size)
         if not sched_slots:
             return []
-        self.run_round({i: 1 for i in sched_slots})
+        self.run_round(grants)
         return sched_slots
 
     def run_round(self, chunks: Dict[int, int]) -> Dict[int, List[tuple]]:
         """Execute one already-scheduled round: ``chunks[slot]`` is the
         token budget the control plane granted that slot this round.
         A decode slot advances one token; a PREFILL slot (submit_turn)
-        teacher-forces up to its chunk of prompt tokens. Chunks > 1 run
-        as sequential sub-batches in which every other granted slot also
-        participates only once — so a long prompt never stalls concurrent
-        decode for more than one round's worth of work.
+        teacher-forces up to its chunk of prompt tokens.
+
+        On the fused plane (``fused_step=True``, the default) the whole
+        round — every slot's grant, C-token prefill chunks included —
+        packs into **one jitted launch** (DESIGN.md §11): each slot's
+        chunk KV is scattered in one paged write and every query token
+        attends causally over history + chunk prefix. With
+        ``fused_step=False`` chunks > 1 run as sequential single-token
+        sub-batches in which every other granted slot participates only
+        once — the per-token differential control.
 
         Returns per-slot event lists for the caller to stream out:
         ``("prefill", n_prefilled)``, ``("token", tok)`` (playable output
@@ -730,12 +840,123 @@ class PagedRealtimeEngine:
         Safe to interleave with ``abort``/``submit_turn`` between calls
         (asyncio single-thread discipline: never called concurrently).
 
-        Between decode sub-batches the round drains up to
-        ``transfer_chunks_per_round`` queued transfer chunks — this is
-        where a speech-time preload physically lands while other
-        sessions keep decoding (DESIGN.md §10)."""
+        Around the launch (between decode sub-batches on the per-token
+        plane) the round drains up to ``transfer_chunks_per_round``
+        queued transfer chunks — this is where a speech-time preload
+        physically lands while other sessions keep decoding
+        (DESIGN.md §10)."""
+        if self.fused_step:
+            return self._run_round_fused(chunks)
+        return self._run_round_tokenwise(chunks)
+
+    def _round_feeds(self, chunks: Dict[int, int]) -> Dict[int, tuple]:
+        """The round's grants as token arrays: ``{slot: (sid, tokens)}``
+        — a PREFILL slot's next chunk of prompt tokens, one pending
+        token for a decode slot — growing each sequence once for its
+        whole grant (plus one best-effort lookahead page). A slot whose
+        mandatory growth hits pool pressure is held for the round
+        (``pressure_holds``): it retries next round when pressure
+        drains; scheduling moves WHEN tokens appear, never WHICH
+        (§5.2), so holding is safe."""
+        feeds: Dict[int, tuple] = {}
+        for i, c in chunks.items():
+            s = self.slot_state[i]
+            if s is None or not s.request.is_live():
+                continue
+            r = s.request
+            if r.phase == Phase.PREFILL:
+                n = min(c, r.prompt_len - r.prefilled)
+                if n > 0:
+                    feeds[i] = (s.session_id,
+                                np.asarray(s.prompt[r.prefilled:
+                                                    r.prefilled + n],
+                                           np.int32))
+            elif c > 0 and r.generated < r.max_new_tokens:
+                # a zero grant is "not scheduled this round" on both
+                # planes — the planes' bit-exactness contract covers
+                # every run_round input, not just scheduler outputs
+                feeds[i] = (s.session_id,
+                            np.asarray([s.pending_token], np.int32))
+        for i in list(feeds):
+            sid, toks = feeds[i]
+            sess = self.sessions[sid]
+            try:
+                self._grow(sid, sess.kv_len + len(toks))
+            except OutOfPages:
+                # allocation failure mid-round: admission accounted
+                # blocks that interaction events (speech protection, a
+                # barge-in trim re-pinning pressure elsewhere) made
+                # unreclaimable by the time this round allocates.
+                del feeds[i]
+                self.pressure_holds += 1
+                continue
+            # best-effort lookahead, hoisted to once per slot per round
+            # (ISSUE 5 satellite): own the page past the whole grant
+            # before any write crosses into it, so boundary tokens never
+            # wait on allocation/eviction (these are the in-flight pages
+            # a barge-in trims)
+            self._grow(sid, sess.kv_len + len(toks) + self.page_size,
+                       best_effort=True)
+        return feeds
+
+    def _run_round_fused(self, chunks: Dict[int, int]) \
+            -> Dict[int, List[tuple]]:
+        """One round = one launch: pack every grant into a padded
+        [slots, Q] token batch and advance all of it in a single jitted
+        fused step."""
         events: Dict[int, List[tuple]] = {i: [] for i in chunks}
         xfer_budget = self.transfer_chunks_per_round
+        if xfer_budget > 0:
+            xfer_budget -= self.drain_transfers(1)
+        feeds = self._round_feeds(chunks)
+        if feeds:
+            out = self._run_chunk_rows(feeds)
+            for i, (sid, toks) in feeds.items():
+                s = self.slot_state[i]
+                sess = self.sessions[sid]
+                n = len(toks)
+                sess.kv_len += n
+                r = s.request
+                tok = int(np.argmax(out[i]))
+                if r.phase == Phase.PREFILL:
+                    r.prefilled += n
+                    # same event stream as the per-token plane: one
+                    # progress event per intermediate prompt token, and
+                    # the chunk's last logits become the first output
+                    # token iff the prompt completed this round
+                    events[i] += [("prefill", r.prefilled - n + 1 + t)
+                                  for t in range(n - (1 if r.done_prefill
+                                                     else 0))]
+                    if r.done_prefill:
+                        r.phase = Phase.DECODE
+                        r.first_output_time = self.clock.now()
+                        s.pending_token = tok
+                        s.tokens.append(tok)
+                        sess.turn_stats[-1]["ttft_s"] = \
+                            self.clock.now() - sess.turn_arrival
+                        events[i].append(("token", tok))
+                else:
+                    r.generated += 1
+                    s.pending_token = tok
+                    if r.generated < r.max_new_tokens:
+                        s.tokens.append(tok)
+                        events[i].append(("token", tok))
+                    else:
+                        r.state = RequestState.FINISHED
+                        self._close_turn(i, aborted=False)
+                        events[i].append(("finished", r.generated))
+        if xfer_budget > 0:
+            self.drain_transfers(xfer_budget)
+        return events
+
+    def _run_round_tokenwise(self, chunks: Dict[int, int]) \
+            -> Dict[int, List[tuple]]:
+        """The per-token plane (``fused_step=False``): chunks > 1 run as
+        sequential single-token sub-batches — the differential control
+        the fused plane is bit-exactness-tested against."""
+        events: Dict[int, List[tuple]] = {i: [] for i in chunks}
+        xfer_budget = self.transfer_chunks_per_round
+        lookahead_done = set()
         for j in range(max(chunks.values(), default=0)):
             if xfer_budget > 0:
                 xfer_budget -= self.drain_transfers(1)
@@ -749,7 +970,8 @@ class PagedRealtimeEngine:
                     if j < c and r.prefilled < r.prompt_len:
                         feeds[i] = (s.session_id,
                                     int(s.prompt[r.prefilled]))
-                elif j == 0 and r.generated < r.max_new_tokens:
+                elif j == 0 and c > 0 \
+                        and r.generated < r.max_new_tokens:
                     feeds[i] = (s.session_id, s.pending_token)
             if not feeds:
                 break
@@ -769,12 +991,20 @@ class PagedRealtimeEngine:
                     del feeds[i]
                     self.pressure_holds += 1
                     continue
-                # best-effort lookahead: own the next page before the
-                # write that crosses into it, so the boundary token never
-                # waits on allocation/eviction (these are the in-flight
-                # pages a barge-in trims)
-                self._grow(s.session_id, sess.kv_len + 1 + self.page_size,
-                           best_effort=True)
+                # best-effort lookahead, hoisted to once per slot per
+                # round (ISSUE 5 satellite): cover the slot's remaining
+                # grant plus the page past it, so the boundary token
+                # never waits on allocation/eviction (these are the
+                # in-flight pages a barge-in trims)
+                if i not in lookahead_done:
+                    lookahead_done.add(i)
+                    r = s.request
+                    rest = min(chunks[i] - j,
+                               r.prompt_len - r.prefilled) \
+                        if r.phase == Phase.PREFILL else 1
+                    self._grow(s.session_id,
+                               sess.kv_len + rest + self.page_size,
+                               best_effort=True)
             if not feeds:
                 continue                     # everything held this round
             out = self._run_rows(feeds)
@@ -827,6 +1057,31 @@ class PagedRealtimeEngine:
             jnp.asarray(tabs.positions), self.k_pages, self.v_pages,
             jnp.asarray(tabs.block_tables), jnp.asarray(tabs.seq_lens),
             jnp.asarray(tabs.write_page), jnp.asarray(tabs.write_slot))
+        logits = np.asarray(logits)
+        return {i: logits[i] for i in feeds}
+
+    def _run_chunk_rows(self, feeds: Dict[int, tuple]) \
+            -> Dict[int, np.ndarray]:
+        """Run one fused step with ``feeds[row] = (sid, tokens)`` —
+        up to Q consecutive tokens per row, padded (rows and token
+        slots alike) onto the scratch page. Returns each row's
+        last-valid-token logits."""
+        q_tokens = _q_bucket(max(len(t) for _, t in feeds.values()))
+        rows: List[Optional[tuple]] = [None] * self.slots
+        tokens = np.zeros((self.slots, q_tokens), np.int32)
+        for i, (sid, toks) in feeds.items():
+            rows[i] = (sid, self.sessions[sid].kv_len, len(toks))
+            tokens[i, :len(toks)] = toks
+        tabs: FusedBatchTables = assemble_fused(
+            self.pool, rows, q_tokens, self.pages_per_seq,
+            self.scratch_page)
+        logits, self.k_pages, self.v_pages = self._fused_fn(
+            self.params, jnp.asarray(tokens),
+            jnp.asarray(tabs.positions), self.k_pages, self.v_pages,
+            jnp.asarray(tabs.block_tables), jnp.asarray(tabs.q_start),
+            jnp.asarray(tabs.q_lens), jnp.asarray(tabs.write_pages),
+            jnp.asarray(tabs.write_slots))
+        self.fused_launches += 1
         logits = np.asarray(logits)
         return {i: logits[i] for i in feeds}
 
@@ -905,7 +1160,8 @@ class PagedRealtimeEngine:
 # ======================================================================
 # demo driver (launch/serve.py --engine real and examples/)
 # ======================================================================
-def run_multiturn_demo(*, seed: int = 0, mesh=None, log=print) -> dict:
+def run_multiturn_demo(*, seed: int = 0, mesh=None,
+                       fused_step: bool = True, log=print) -> dict:
     """A laptop-scale end-to-end conversation on the real data plane,
     walking the whole §5 mechanism:
 
@@ -933,7 +1189,8 @@ def run_multiturn_demo(*, seed: int = 0, mesh=None, log=print) -> dict:
     # transfer times land in the milliseconds the paper plots
     eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=8,
                               pages_per_seq=9, num_pages=11,
-                              pcie_gb_s=0.01, mesh=mesh)
+                              pcie_gb_s=0.01, mesh=mesh,
+                              fused_step=fused_step)
     rng = np.random.default_rng(seed)
 
     def prompt(n):
