@@ -154,6 +154,19 @@ class RuntimeMonitor:
         v.resident_pages = resident
         v.offloaded_pages = offloaded
 
+    def forget(self, session_id: str) -> Optional[SessionView]:
+        """Drop (and return) a session's view — the session left this
+        monitor's engine (migrated away or fully released)."""
+        return self.sessions.pop(session_id, None)
+
+    def adopt(self, session_id: str, view: SessionView) -> None:
+        """Install a view transplanted from another engine's monitor so
+        interaction state (reply-gap EMA, speaking flag, expected speech
+        end) survives a cross-replica migration — Eq. 4 and the preload
+        window keep working on the destination without a cold start."""
+        assert session_id not in self.sessions, session_id
+        self.sessions[session_id] = view
+
     # ----------------------------------------------------------- queries
     def view(self, session_id: str) -> Optional[SessionView]:
         return self.sessions.get(session_id)

@@ -52,6 +52,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 RELOAD = "reload"
 OFFLOAD = "offload"
 
+# chunk tag marking replica-to-replica migration legs (serving/fleet):
+# the source's migrate-out offload and the destination's page-in both
+# ride the normal RELOAD/OFFLOAD machinery, but tagged chunks are
+# separately countable so migration traffic is observable (and its
+# zero-copy cancellation provable) without a third transfer kind
+MIGRATE = "migrate"
+
 # default chunk sizing target: one chunk ~ one decode round of DMA
 TARGET_CHUNK_S = 0.005
 
@@ -65,6 +72,7 @@ class TransferChunk:
     logical: List[int]               # logical page indices (pool order)
     modeled_done: float              # channel-modeled completion instant
     state: str = "queued"            # queued | done | cancelled
+    tag: Optional[str] = None        # e.g. MIGRATE — observability only
 
     @property
     def pages(self) -> int:
@@ -81,6 +89,8 @@ class TransferStats:
     offload_pages_cancelled: int = 0
     chunks_drained: int = 0
     demand_drains: int = 0           # offload chunks forced by allocation
+    migration_pages_moved: int = 0   # MIGRATE-tagged pages that drained
+    migration_pages_cancelled: int = 0   # MIGRATE-tagged zero-copy drops
 
     def overlap_fraction(self) -> float:
         """Off-path share of reloaded pages; 0.0 when nothing reloaded
@@ -135,7 +145,8 @@ class TransferEngine:
                 for i in range(0, len(logical), self.chunk_pages)]
 
     def submit_reload(self, sid: str, logical: List[int],
-                      transfer=None) -> List[TransferChunk]:
+                      transfer=None, *,
+                      tag: Optional[str] = None) -> List[TransferChunk]:
         """Queue a host->device job. ``transfer`` is the KVManager's
         aggregate modeled Transfer; per-chunk modeled completion times
         interpolate its [start, done] span (the serialized channel
@@ -153,13 +164,14 @@ class TransferEngine:
                     * (done_pages / total)
             else:
                 md = float("inf")
-            c = TransferChunk(next(self._ids), sid, RELOAD, list(g), md)
+            c = TransferChunk(next(self._ids), sid, RELOAD, list(g), md,
+                              tag=tag)
             self._queue.append(c)
             out.append(c)
         return out
 
-    def submit_offload(self, sid: str, logical: List[int]
-                       ) -> List[TransferChunk]:
+    def submit_offload(self, sid: str, logical: List[int], *,
+                       tag: Optional[str] = None) -> List[TransferChunk]:
         """Queue a device->host job (copy-then-free: the caller keeps
         the pages usable until each chunk drains). Offloads are not
         stall-modeled — they never sit on a turn's critical path; the
@@ -170,7 +182,7 @@ class TransferEngine:
         out = []
         for g in self._chunks_of(logical):
             c = TransferChunk(next(self._ids), sid, OFFLOAD, list(g),
-                              float("-inf"))
+                              float("-inf"), tag=tag)
             self._queue.append(c)
             out.append(c)
         return out
@@ -182,6 +194,9 @@ class TransferEngine:
             self._io_reload(chunk.session_id, chunk.logical)
         else:
             self._io_offload(chunk.session_id, chunk.logical)
+            self.stats.offload_pages_completed += chunk.pages
+        if chunk.tag == MIGRATE:
+            self.stats.migration_pages_moved += chunk.pages
         chunk.state = "done"
 
     def drain(self, now: float, max_chunks: Optional[int] = None, *,
@@ -287,7 +302,10 @@ class TransferEngine:
                 keep = []
             else:
                 keep = [li for li in c.logical if li not in want]
-            dropped += c.pages - len(keep)
+            hit = c.pages - len(keep)
+            dropped += hit
+            if c.tag == MIGRATE:
+                self.stats.migration_pages_cancelled += hit
             c.logical = keep
             if not keep:
                 c.state = "cancelled"

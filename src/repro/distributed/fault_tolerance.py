@@ -62,10 +62,23 @@ def elastic_rescale(ckpt_dir: str, make_mesh: Callable[[], "jax.sharding.Mesh"],
 
 @dataclass
 class StragglerMitigator:
+    """Per-round deadline tracking with a genuine recovery path.
+
+    A round exceeding ``deadline_factor`` x the rolling median earns the
+    source a strike. A single round back under the deadline does NOT
+    erase the record — an alternating slow/fast straggler must still
+    accumulate — but ``recover_after`` *consecutive* under-deadline
+    rounds reset the source to a clean slate. ``forget`` drops a source
+    that was drained/replaced so its history cannot leak onto a fresh
+    replica reusing the name.
+    """
     deadline_factor: float = 3.0
     window: int = 32
+    min_samples: int = 8
+    recover_after: int = 2
     durations: List[float] = field(default_factory=list)
     strikes: dict = field(default_factory=dict)
+    good_streak: dict = field(default_factory=dict)
 
     def observe(self, source: str, duration_s: float) -> bool:
         """Record a round duration; True if `source` is straggling."""
@@ -73,11 +86,23 @@ class StragglerMitigator:
         if len(self.durations) > self.window:
             self.durations.pop(0)
         med = float(np.median(self.durations))
-        if len(self.durations) >= 8 and duration_s > self.deadline_factor * med:
+        if (len(self.durations) >= self.min_samples
+                and duration_s > self.deadline_factor * med):
             self.strikes[source] = self.strikes.get(source, 0) + 1
+            self.good_streak.pop(source, None)
             return True
-        self.strikes.pop(source, None)
+        if source in self.strikes:
+            streak = self.good_streak.get(source, 0) + 1
+            if streak >= self.recover_after:
+                self.forget(source)
+            else:
+                self.good_streak[source] = streak
         return False
 
     def should_evict(self, source: str, threshold: int = 3) -> bool:
         return self.strikes.get(source, 0) >= threshold
+
+    def forget(self, source: str) -> None:
+        """Clean slate for ``source`` (drained / replaced replica)."""
+        self.strikes.pop(source, None)
+        self.good_streak.pop(source, None)

@@ -123,6 +123,22 @@ class PagedPool:
             if p >= 0:
                 self.free.append(p)
 
+    def adopt(self, seq_id: str, n_pages: int, length: int,
+              offloaded: Dict[int, np.ndarray]) -> SeqPages:
+        """Install a sequence arriving from another pool (cross-replica
+        migration handoff). Every page lands host-resident — the source
+        drained its chunked offloads before the handoff — so adoption
+        allocates nothing here; the destination's reload machinery pages
+        the KV back in on its own clock."""
+        assert seq_id not in self.seqs, f"{seq_id} already placed"
+        assert set(offloaded) == set(range(n_pages)), \
+            f"{seq_id}: handoff requires a full host copy " \
+            f"({sorted(offloaded)} vs {n_pages} pages)"
+        s = SeqPages(seq_id, pages=[-1] * n_pages, length=length,
+                     offloaded=dict(offloaded))
+        self.seqs[seq_id] = s
+        return s
+
     # ------------------------------------------------------------ tables
     def block_table(self, seq_ids: List[str], pages_per_seq: int,
                     *, pad_page: int = 0) -> np.ndarray:

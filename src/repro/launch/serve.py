@@ -82,12 +82,18 @@ def main() -> None:
                          "chunked KV transfer budget that lands "
                          "speech-time preloads off the turn critical "
                          "path (DESIGN.md §10)")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="live engine: N data-parallel engine replicas "
+                         "behind one gateway, with live cross-replica "
+                         "KV migration (DESIGN.md §12). Composes with "
+                         "--mesh: every replica shards its page store "
+                         "over the same mesh")
     args = ap.parse_args()
 
     if args.engine != "live":
         live_only = [f"--{f.replace('_', '-')}" for f in
                      ("clock_scale", "slots", "kv_pages",
-                      "preload_chunks")
+                      "preload_chunks", "replicas")
                      if getattr(args, f) is not None]
         if live_only:
             ap.error(f"{', '.join(live_only)} only apply to "
@@ -147,8 +153,10 @@ def main() -> None:
                      f"{'|'.join(policies)} (the paged data plane needs "
                      f"an offload tier; 'vllm-omni-wo' discards KV — "
                      f"use --engine sim for that baseline)")
-        from repro.serving.gateway import run_gateway_workload
-        m, gw = run_gateway_workload(
+        replicas = args.replicas if args.replicas is not None else 1
+        if replicas < 1:
+            ap.error("--replicas must be >= 1")
+        run_kw = dict(
             policy=policies[system], kind=workload, sessions=sessions,
             barge_in=barge_in, seed=args.seed,
             scale=(args.clock_scale
@@ -159,11 +167,31 @@ def main() -> None:
                             if args.preload_chunks is not None else 1),
             fused_step=args.fused_step,
             frontier_cap_s=3.0 if system == "liveserve" else None)
+        if replicas > 1:
+            from repro.serving.fleet import run_fleet_workload
+            m, gw = run_fleet_workload(replicas=replicas, **run_kw)
+            engines = list(gw.replicas)
+        else:
+            from repro.serving.gateway import run_gateway_workload
+            m, gw = run_gateway_workload(**run_kw)
+            engines = [gw.engine]
         s = m.summary()
         s["rounds"] = gw.rounds
         s["max_over_frontier_s"] = gw.max_over_frontier_s
-        s["transfer_overlap_frac"] = \
-            gw.engine.transfer.stats.overlap_fraction()
+        off = sum(e.transfer.stats.reload_pages_off_path
+                  for e in engines)
+        on = sum(e.transfer.stats.reload_pages_on_path for e in engines)
+        s["transfer_overlap_frac"] = off / (off + on) if off + on else 0.0
+        if replicas > 1:
+            done = gw.migrator.completed()
+            for i in range(replicas):
+                mig_in = sum(1 for p in done if p.dst == i)
+                mig_out = sum(1 for p in done if p.src == i)
+                s[f"replica{i}"] = (
+                    f"routed={gw.router.routed[i]} "
+                    f"migrated_in={mig_in} migrated_out={mig_out} "
+                    f"peak_occupancy={m.replica_occupancy[i]:.3f}"
+                    + (" [drained]" if i in gw.router.draining else ""))
     else:
         from repro.serving.costmodel import PIPELINES
         from repro.serving.simulator import run_sim

@@ -102,6 +102,19 @@ class SessionHandle:
         return await self._gs.outbox.get()
 
 
+def build_scheduler(policy: str, monitor, kv_occupancy, *, chunk: int,
+                    sc: Optional[SchedulerConfig] = None):
+    """One engine's round scheduler — shared by the asyncio gateway,
+    the replay twin, and the fleet gateways (each replica gets its own
+    scheduler over its own monitor/KV pressure)."""
+    if policy == "liveserve":
+        return UrgencyScheduler(sc or SchedulerConfig(), monitor,
+                                stage="thinker",
+                                kv_occupancy=kv_occupancy,
+                                prefill_chunk=chunk)
+    return FCFSScheduler(monitor, stage="thinker", prefill_chunk=chunk)
+
+
 def record_admitted_turn(rec, r: Request) -> None:
     """Copy the admission-time reload accounting from the Request onto
     the TurnRecord — the one coupling between the engine's turn stats
@@ -185,23 +198,22 @@ class RealtimeGateway:
         self.engine = engine
         self.cfg = cfg or GatewayConfig()
         self.clock = engine.clock
-        assert hasattr(self.clock, "real_s"), \
-            "gateway needs a ScaledWallClock-like clock on the engine " \
-            "(sim time and wall time must be the same timeline)"
-        sc = self.cfg.sched or SchedulerConfig()
+        self._init_common()
+        self.scheduler = build_scheduler(
+            self.cfg.policy, engine.monitor, engine.kv.occupancy,
+            chunk=self.sched_chunk(), sc=self.cfg.sched)
+
+    def sched_chunk(self) -> int:
         # a prefill chunk larger than the round budget can never be
         # admitted — Algorithm 1's head-of-line break would then hold it
         # (and everything behind it) forever
-        chunk = max(1, min(self.cfg.prefill_chunk,
-                           self.cfg.round_token_budget))
-        if self.cfg.policy == "liveserve":
-            self.scheduler = UrgencyScheduler(
-                sc, engine.monitor, stage="thinker",
-                kv_occupancy=engine.kv.occupancy,
-                prefill_chunk=chunk)
-        else:
-            self.scheduler = FCFSScheduler(
-                engine.monitor, stage="thinker", prefill_chunk=chunk)
+        return max(1, min(self.cfg.prefill_chunk,
+                          self.cfg.round_token_budget))
+
+    def _init_common(self) -> None:
+        assert hasattr(self.clock, "real_s"), \
+            "gateway needs a ScaledWallClock-like clock on the engine " \
+            "(sim time and wall time must be the same timeline)"
         self._inbox: asyncio.Queue = asyncio.Queue()
         self._sessions: Dict[str, GatewaySession] = {}
         self._pending: Dict[str, PendingTurn] = {}
@@ -213,6 +225,15 @@ class RealtimeGateway:
         # frontier telemetry: worst observed client buffer beyond the
         # configured cap at token-emission time (the §4 invariant)
         self.max_over_frontier_s = 0.0
+
+    # engine indirection: the fleet gateway (serving/fleet) overrides
+    # these two so every per-session path below runs against the
+    # replica the router placed the session on
+    def _eng(self, sid: str):
+        return self.engine
+
+    def _engines(self):
+        return (self.engine,)
 
     # ------------------------------------------------------------ clients
     def connect(self, session_id: str) -> SessionHandle:
@@ -246,7 +267,7 @@ class RealtimeGateway:
     # ------------------------------------------------------------ events
     def _handle(self, ev: SessionEvent) -> None:
         sid = ev.session_id
-        eng = self.engine
+        eng = self._eng(sid)
         if isinstance(ev, SpeechStart):
             # fires the §5.2 speech-time preload while the user talks
             eng.user_speech_start(sid, expected_dur_s=ev.expected_dur_s)
@@ -267,7 +288,7 @@ class RealtimeGateway:
         gs = self._sessions[sid]
         gs.turn_no += 1
         now = self.clock.now()
-        sess = self.engine.sessions.get(sid)
+        sess = self._eng(sid).sessions.get(sid)
         req = Request(session_id=sid, stage="thinker",
                       turn_index=gs.turn_no, arrival_time=now,
                       prompt_len=int(len(ev.prompt)),
@@ -281,14 +302,14 @@ class RealtimeGateway:
         rec.speech_end = now
 
     def _slot_of(self, sid: str) -> Optional[int]:
-        for i, s in self.engine.slot_state.items():
+        for i, s in self._eng(sid).slot_state.items():
             if s is not None and s.session_id == sid:
                 return i
         return None
 
     def _on_barge_in(self, ev: BargeIn) -> None:
         sid = ev.session_id
-        eng = self.engine
+        eng = self._eng(sid)
         now = self.clock.now()
         slot = self._slot_of(sid)
         gs = self._sessions[sid]
@@ -324,7 +345,7 @@ class RealtimeGateway:
                 generated=rec.talker_generated if rec else 0))
 
     def _on_hangup(self, sid: str) -> None:
-        eng = self.engine
+        eng = self._eng(sid)
         gs = self._sessions[sid]
         if self._slot_of(sid) is not None:
             eng.abort(sid)
@@ -360,10 +381,10 @@ class RealtimeGateway:
 
     def _dispatch(self, events: Dict[int, List[tuple]],
                   sids: Dict[int, str]) -> None:
-        eng = self.engine
         apt = self.cfg.audio_per_token_s
         for slot, evs in events.items():
             sid = sids[slot]
+            eng = self._eng(sid)
             gs = self._sessions[sid]
             rec = self._rec(sid)
             for kind, val in evs:
@@ -411,12 +432,27 @@ class RealtimeGateway:
         if self._pending:
             return True
         return any(s is not None and s.request.is_live()
-                   for s in self.engine.slot_state.values())
+                   for eng in self._engines()
+                   for s in eng.slot_state.values())
+
+    def _pump(self) -> None:
+        """Per-iteration control-plane work beyond event handling; the
+        fleet gateway advances its migration plans here (atomic with
+        rounds under the single-threaded asyncio contract)."""
+
+    def _idle_drain(self) -> None:
+        for eng in self._engines():
+            eng.drain_transfers(self.cfg.idle_transfer_chunks)
+
+    def _hold_wake(self) -> Optional[float]:
+        ld = getattr(self, "last_decision", None)
+        return self.scheduler.hold_wake_s(ld) if ld else None
 
     async def run(self) -> None:
         """Serve until ``stop()`` is called and in-flight work drains."""
         while True:
             self._drain()
+            self._pump()
             if self._round():
                 await asyncio.sleep(0)       # let client tasks react
                 continue
@@ -426,14 +462,12 @@ class RealtimeGateway:
                     and not self._live_work():
                 return
             # idle: nothing decodes this instant, but queued transfer
-            # chunks (a speech-time preload, a copy-then-free offload)
-            # still progress — this is exactly the window the paper
-            # hides reload work in (DESIGN.md §10)
-            self.engine.drain_transfers(self.cfg.idle_transfer_chunks)
+            # chunks (a speech-time preload, a copy-then-free offload, a
+            # migrate-out drain) still progress — this is exactly the
+            # window the paper hides reload work in (DESIGN.md §10)
+            self._idle_drain()
             wake = self.cfg.idle_sleep_s
-            held = self.scheduler.hold_wake_s(
-                getattr(self, "last_decision", None)) \
-                if getattr(self, "last_decision", None) else None
+            held = self._hold_wake()
             if held is not None:
                 wake = min(wake, held)
             try:

@@ -108,6 +108,27 @@ class ReplayGateway:
         self.max_over_frontier_s = 0.0
         self._admit_trace(workload, seed)
 
+    # ----------------------------------------------------- fleet hooks
+    # The fleet replay twin (serving/fleet/replay.py) overrides these so
+    # every per-session path below runs against the replica its router
+    # placed the session on — the same seam RealtimeGateway exposes.
+    def _eng(self, sid: str):
+        return self.eng
+
+    def _engines(self):
+        return (self.eng,)
+
+    def _pump(self) -> None:
+        """Fleet migration plans advance here, between event delivery
+        and the round — the virtual-time mirror of the asyncio
+        gateway's ``_pump``."""
+
+    def _idle_transfer(self) -> bool:
+        did = False
+        for e in self._engines():
+            did = bool(e.drain_transfers(1)) or did
+        return did
+
     # ------------------------------------------------------------ trace
     def _admit_trace(self, workload: WorkloadConfig, seed: int) -> None:
         """Clamp the trace exactly like ``gateway/client.py`` (one rng
@@ -158,17 +179,18 @@ class ReplayGateway:
     def _speech_start(self, s, ti: int) -> None:
         sid = s.session_id
         _, _, speech_dur, _ = self._clamped_turn(s, ti)
-        self.eng.user_speech_start(sid, expected_dur_s=speech_dur)
+        self._eng(sid).user_speech_start(sid, expected_dur_s=speech_dur)
         self._push(self.clock.now() + speech_dur, self._turn_request,
                    s, ti)
 
     def _turn_request(self, s, ti: int) -> None:
         sid = s.session_id
         prompt, n_tokens, _, _ = self._clamped_turn(s, ti)
-        self.eng.monitor.on_speech_end(sid)
+        eng = self._eng(sid)
+        eng.monitor.on_speech_end(sid)
         self._turn_no[sid] = ti
         now = self.clock.now()
-        sess = self.eng.sessions.get(sid)
+        sess = eng.sessions.get(sid)
         req = Request(session_id=sid, stage="thinker", turn_index=ti,
                       arrival_time=now, prompt_len=int(len(prompt)),
                       context_len=sess.kv_len if sess else 0,
@@ -183,7 +205,7 @@ class ReplayGateway:
         interrupt playback, then the interrupting utterance becomes the
         next turn immediately."""
         sid = s.session_id
-        eng = self.eng
+        eng = self._eng(sid)
         now = self.clock.now()
         rec = self._recs.get((sid, ti))
         view = eng.monitor.view(sid)
@@ -213,7 +235,7 @@ class ReplayGateway:
     def _turn_done(self, s, ti: int) -> None:
         sid = s.session_id
         now = self.clock.now()
-        v = self.eng.monitor.view(sid)
+        v = self._eng(sid).monitor.view(sid)
         drain = v.playback.buffer_s(now) if v else 0.0
         self._next_or_hangup(s, ti,
                              at=now + drain + (s.think_time_s or 0.0))
@@ -227,15 +249,16 @@ class ReplayGateway:
 
     def _hangup(self, s) -> None:
         sid = s.session_id
+        eng = self._eng(sid)
         if self._slot_of(sid) is not None:
-            self.eng.abort(sid)
+            eng.abort(sid)
         self._pending.pop(sid, None)
-        if sid in self.eng.sessions and not self.eng.sessions[sid].ended:
-            self.eng.end_session(sid)
+        if sid in eng.sessions and not eng.sessions[sid].ended:
+            eng.end_session(sid)
         self.metrics.completed_sessions += 1
 
     def _slot_of(self, sid: str) -> Optional[int]:
-        for i, st in self.eng.slot_state.items():
+        for i, st in self._eng(sid).slot_state.items():
             if st is not None and st.session_id == sid:
                 return i
         return None
@@ -266,10 +289,10 @@ class ReplayGateway:
 
     def _dispatch(self, events: Dict[int, List[tuple]],
                   sids: Dict[int, str]) -> None:
-        eng = self.eng
         apt = self.cfg.audio_per_token_s
         for slot, evs in events.items():
             sid = sids[slot]
+            eng = self._eng(sid)
             s = self._by_sid[sid]
             ti = self._turn_no[sid]
             rec = self._rec(sid)
@@ -313,7 +336,8 @@ class ReplayGateway:
             return True
         return any(st is not None and st.request.is_live()
                    and st.request.generated < st.request.max_new_tokens
-                   for st in self.eng.slot_state.values())
+                   for e in self._engines()
+                   for st in e.slot_state.values())
 
     def run(self, *, max_rounds: int = 200_000,
             check_every_round=None) -> Metrics:
@@ -326,6 +350,7 @@ class ReplayGateway:
             while self._events and self._events[0][0] <= self.clock.now():
                 _, _, fn, args = heapq.heappop(self._events)
                 fn(*args)
+            self._pump()
             if self._round():
                 self.clock.tick(self.cfg.round_dt)
                 idle = 0
@@ -339,7 +364,7 @@ class ReplayGateway:
             # to the next client event — the deterministic mirror of
             # the asyncio gateway's idle-loop drain, so a speech-time
             # preload lands during the (virtual) utterance
-            if self.eng.drain_transfers(1):
+            if self._idle_transfer():
                 self.clock.tick(self.cfg.round_dt)
                 if check_every_round is not None:
                     check_every_round()

@@ -33,6 +33,8 @@ class TurnRecord:
     reload_off_path_s: float = 0.0         # reload hidden off the path
     completed: bool = False
     finish_time: float = 0.0
+    migrated: bool = False                 # turn started on a replica the
+    #                                        session was live-migrated to
 
     @property
     def continuous(self) -> bool:
@@ -50,6 +52,13 @@ class Metrics:
     turns: List[TurnRecord] = field(default_factory=list)
     completed_sessions: int = 0
     sim_end: float = 0.0
+    # fleet fields (serving/fleet) — zero/empty on single-engine planes
+    # so the sim/gateway summary schema stays a strict dict diff
+    migrations: int = 0                    # completed cross-replica moves
+    migration_bytes: float = 0.0           # KV bytes moved between replicas
+    migration_on_path_s: float = 0.0       # charged to a turn start
+    migration_off_path_s: float = 0.0      # hidden in the speech window
+    replica_occupancy: List[float] = field(default_factory=list)
 
     def ttfps(self):
         return sorted(t.ttfp for t in self.turns if t.ttfp is not None)
@@ -93,6 +102,16 @@ class Metrics:
             return 0.0
         return off / (on + off)
 
+    def migration_off_path(self) -> float:
+        """Share of modeled migration seconds kept off the next-turn
+        critical path (source drain + destination page-in during the
+        speech window vs charged at turn start). Same 0.0-not-NaN
+        convention as ``reload_overlap_frac``."""
+        tot = self.migration_on_path_s + self.migration_off_path_s
+        if tot <= 0.0:
+            return 0.0
+        return self.migration_off_path_s / tot
+
     def summary(self) -> dict:
         tt = self.ttfps()
         rtfs = sorted(t.rtf for t in self.turns if t.rtf is not None)
@@ -113,4 +132,9 @@ class Metrics:
             "mean_reload_off_path": (sum(offs) / len(offs)
                                      if offs else 0.0),
             "reload_overlap_frac": self.reload_overlap_frac(),
+            "migrations": self.migrations,
+            "migration_bytes": self.migration_bytes,
+            "migration_off_path_s": self.migration_off_path_s,
+            "migration_off_path": self.migration_off_path(),
+            "replica_occupancy": list(self.replica_occupancy),
         }

@@ -1,0 +1,461 @@
+"""Replica fleet: router policy, migration protocol, straggler
+mitigation, and the multi-replica soak (ISSUE 6).
+
+Three layers:
+
+- **coordinator units** — two or three engines on a driver-owned
+  clock, migrations driven state-by-state through the
+  ``MigrationCoordinator``: natural drain -> handoff -> landing,
+  barge-in cancel, hangup cancel, demanded completion (with its
+  on-path reclassification), destination-pressure cancel, and the
+  token-exactness of a decode that resumes on the destination.
+- **router units** — pressure routing, ring-order destinations, the
+  last-healthy-replica drain refusal, rebalance-margin migrations, and
+  the hardened ``StragglerMitigator`` (alternating slow/fast still
+  accumulates; consecutive good rounds forgive; ``forget`` wipes).
+- **soaks** — 24+ sessions over 3 replicas under barge storms with
+  forced straggler injection (live, real mitigator) and tight-pool
+  pressure with mid-migration hangups (virtual-time twin): page
+  conservation per replica, no leaks, the drained replica ends empty.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.distributed.fault_tolerance import StragglerMitigator
+from repro.models import init_params
+from repro.serving.fleet.harness import build_fleet_gateway, \
+    run_fleet_workload
+from repro.serving.fleet.migration import (CANCELLED, DONE, DRAINING,
+                                           LANDING, NETWORK,
+                                           MigrationCoordinator)
+from repro.serving.fleet.replay import run_fleet_replay
+from repro.serving.fleet.replica_set import ReplicaSet
+from repro.serving.fleet.router import SessionRouter
+from repro.serving.gateway.replay import ReplayClock, ReplayConfig
+from repro.serving.metrics import Metrics
+from repro.serving.paged_engine import PagedRealtimeEngine
+from repro.serving.workload import WorkloadConfig
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                  vocab=331)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ======================================================================
+# coordinator units: a hand-held two-replica fleet
+# ======================================================================
+def _fleet(tiny_model, n=2, *, num_pages=(32, 32),
+           interconnect_gb_s=50.0):
+    cfg, params = tiny_model
+    clock = ReplayClock()
+    engines = [PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                                   pages_per_seq=8, num_pages=num_pages[i],
+                                   clock=clock)
+               for i in range(n)]
+    rs = ReplicaSet(engines, interconnect_gb_s=interconnect_gb_s)
+    router = SessionRouter(rs)
+    metrics = Metrics()
+    return rs, router, MigrationCoordinator(rs, router, metrics), metrics
+
+
+def _seed_session(rs, router, sid, *, prompt_len=9, n_tokens=4, seed=0):
+    """Route ``sid``, run one full turn on its replica, leave it idle
+    with committed KV. Returns (replica_index, produced tokens)."""
+    i = router.route(sid)
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, 331, size=prompt_len)
+    eng = rs[i]
+    eng.add_session(sid, prompt, max_new_tokens=n_tokens)
+    toks = eng.run_to_completion()[sid]
+    eng.check_invariants()
+    assert eng.sessions[sid].kv_len > 0
+    return i, toks
+
+
+def _drain_all(eng, clock):
+    while eng.drain_transfers(4):
+        clock.tick(1e-4)
+
+
+def test_migration_natural_lifecycle(tiny):
+    """DRAINING -> NETWORK -> LANDING -> DONE, with the session record
+    transplanted wholesale and the source scrubbed at handoff."""
+    rs, router, mig, m = _fleet(tiny)
+    src, _ = _seed_session(rs, router, "a")
+    clock = rs.clock
+    pages_before = rs[src].pool.resident_pages("a")
+
+    plan = mig.start("a", src, 1 - src, clock.now())
+    assert plan.state == DRAINING
+    assert plan.pages == pages_before > 0
+    # pages marked offloading: accounting freed, physically resident
+    assert rs[src].kv.sessions["a"].hbm_blocks == 0
+    rs[src].check_invariants()
+
+    _drain_all(rs[src], clock)
+    mig.pump(clock.now())
+    assert plan.state == NETWORK
+    assert router.placement["a"] == 1 - src        # flipped at handoff
+    assert "a" not in rs[src].sessions             # source scrubbed
+    assert rs[src].pool.free_pages == rs[src].num_pages
+    dst = rs[1 - src]
+    assert dst.sessions["a"].kv_len > 0
+    assert dst.kv.sessions["a"].hbm_blocks == 0    # host-resident
+    for e in rs:
+        e.check_invariants()
+    assert m.migrations == 1 and m.migration_bytes > 0
+
+    clock.advance_to(plan.net_done + 1e-6)
+    mig.pump(clock.now())
+    assert plan.state == LANDING
+    # the landing page-in is an ordinary speech-time preload
+    assert dst.transfer.pending_reload_pages("a") > 0 \
+        or dst.kv.sessions["a"].hbm_blocks > 0
+    _drain_all(dst, clock)
+    assert dst.kv.sessions["a"].hbm_blocks == plan.pages
+    dst.check_invariants()
+
+
+def test_migration_resumes_decode_token_exact(tiny):
+    """The destination continues the conversation bit-exactly: same
+    tokens a never-migrated engine produces for turn 2."""
+    cfg, params = tiny
+    rs, router, mig, _ = _fleet(tiny)
+    src, _ = _seed_session(rs, router, "a")
+    clock = rs.clock
+    rng = np.random.default_rng(42)
+    prompt2 = rng.integers(0, 331, size=5)
+
+    # reference: same two turns on one engine, no migration
+    ref = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                              pages_per_seq=8, num_pages=32,
+                              clock=ReplayClock())
+    rngr = np.random.default_rng(0)
+    ref.add_session("a", rngr.integers(0, 331, size=9), max_new_tokens=4)
+    ref.run_to_completion()
+    ref.start_turn("a", prompt2, max_new_tokens=4)
+    want = ref.run_to_completion()["a"]
+
+    plan = mig.start("a", src, 1 - src, clock.now())
+    _drain_all(rs[src], clock)
+    mig.pump(clock.now())
+    clock.advance_to(plan.net_done + 1e-6)
+    mig.pump(clock.now())
+    dst = rs[1 - src]
+    _drain_all(dst, clock)
+    dst.start_turn("a", prompt2, max_new_tokens=4)
+    got = dst.run_to_completion()["a"]
+    assert got == want
+    dst.check_invariants()
+
+
+def test_migration_barge_cancel_zero_copy(tiny):
+    """Barge-in mid-drain: queued chunks drop, pages return resident,
+    and the interrupting turn runs on the source immediately."""
+    rs, router, mig, m = _fleet(tiny)
+    src, _ = _seed_session(rs, router, "a")
+    clock = rs.clock
+    eng = rs[src]
+    moved0 = eng.transfer.stats.migration_pages_moved
+
+    plan = mig.start("a", src, 1 - src, clock.now())
+    mig.on_barge("a", clock.now())
+    assert plan.state == CANCELLED and plan.reason == "barge"
+    assert not mig.plans and mig.cancelled() == [plan]
+    # zero-copy: nothing moved, everything resident again
+    assert eng.transfer.stats.migration_pages_moved == moved0
+    assert eng.kv.sessions["a"].hbm_blocks == plan.pages
+    assert router.placement["a"] == src
+    eng.check_invariants()
+    assert m.migrations == 0 and m.migration_bytes == 0.0
+
+    rng = np.random.default_rng(3)
+    eng.start_turn("a", rng.integers(0, 331, size=4), max_new_tokens=3)
+    assert len(eng.run_to_completion()["a"]) == 3
+    eng.check_invariants()
+
+
+def test_migration_hangup_cancel_leaks_nothing(tiny):
+    """Hangup mid-drain cancels the plan; the ordinary hangup path then
+    frees every page and host copy."""
+    rs, router, mig, _ = _fleet(tiny)
+    src, _ = _seed_session(rs, router, "a")
+    plan = mig.start("a", src, 1 - src, rs.clock.now())
+    rs[src].drain_transfers(1)                 # a chunk already moved
+    mig.on_hangup("a", rs.clock.now())
+    assert plan.state == CANCELLED and plan.reason == "hangup"
+    rs[src].end_session("a")
+    router.on_session_end("a")
+    for e in rs:
+        e.flush_transfers()
+        e.check_invariants()
+        assert e.pool.free_pages == e.num_pages
+
+
+def test_migration_hangup_mid_network_completes(tiny):
+    """Post-handoff hangup is not a cancel: the bytes moved, the
+    session is the destination's, and its hangup there frees all."""
+    rs, router, mig, _ = _fleet(tiny, interconnect_gb_s=1e-4)
+    src, _ = _seed_session(rs, router, "a")
+    clock = rs.clock
+    plan = mig.start("a", src, 1 - src, clock.now())
+    _drain_all(rs[src], clock)
+    mig.pump(clock.now())
+    assert plan.state == NETWORK and clock.now() < plan.net_done
+    mig.on_hangup("a", clock.now())
+    assert plan.state == DONE and not mig.plans
+    dst = rs[1 - src]
+    dst.end_session("a")
+    router.on_session_end("a")
+    for e in rs:
+        e.flush_transfers()
+        e.check_invariants()
+        assert e.pool.free_pages == e.num_pages
+
+
+def test_migration_demand_complete_charges_on_path(tiny):
+    """A turn request mid-drain forces the migration through, charging
+    the drain residual + network window on-path via the clock — the
+    sync-reload convention."""
+    rs, router, mig, m = _fleet(tiny)
+    src, _ = _seed_session(rs, router, "a")
+    clock = rs.clock
+    t0 = clock.now()
+    plan = mig.start("a", src, 1 - src, t0)
+    assert rs[src].migrate_out_pending("a") == plan.pages
+    mig.demand_complete("a", clock.now())
+    assert plan.state == LANDING
+    assert clock.now() > t0                      # stall charged
+    assert m.migration_on_path_s > 0.0
+    assert m.migration_on_path_s + m.migration_off_path_s == \
+        pytest.approx(clock.now() - t0 + (plan.net_done - plan.net_done))
+    dst = rs[1 - src]
+    dst.start_turn("a", np.arange(3, dtype=np.int64), max_new_tokens=2)
+    assert len(dst.run_to_completion()["a"]) == 2
+    dst.check_invariants()
+    assert mig.plans                             # DONE needs admission
+    assert plan.state == LANDING
+
+
+def test_migration_dst_pressure_cancels(tiny):
+    """The destination must have room at handoff; otherwise the plan
+    cancels and the session stays on the source, its drained pages
+    host-resident until the next turn reloads them."""
+    rs, router, mig, m = _fleet(tiny, num_pages=(32, 2))
+    src, _ = _seed_session(rs, router, "a")    # pressure-routes to 0
+    assert src == 0
+    clock = rs.clock
+    plan = mig.start("a", 0, 1, clock.now())
+    assert plan.pages > 2                      # cannot fit on replica 1
+    _drain_all(rs[0], clock)
+    mig.pump(clock.now())
+    assert plan.state == CANCELLED and plan.reason == "dst_pressure"
+    assert router.placement["a"] == 0
+    assert m.migrations == 0
+    # fully host-resident on the source; the next turn reloads
+    assert rs[0].kv.sessions["a"].hbm_blocks == 0
+    rng = np.random.default_rng(5)
+    rs[0].start_turn("a", rng.integers(0, 331, size=4), max_new_tokens=3)
+    assert len(rs[0].run_to_completion()["a"]) == 3
+    for e in rs:
+        e.check_invariants()
+
+
+# ======================================================================
+# router units
+# ======================================================================
+def test_router_routes_by_pressure(tiny):
+    rs, router, _, _ = _fleet(tiny)
+    assert [router.route(f"s{i}") for i in range(4)] == [0, 1, 0, 1]
+    router.on_session_end("s0")
+    router.on_session_end("s2")
+    assert router.route("s4") == 0             # lightest replica
+
+
+def test_router_never_drains_last_replica(tiny):
+    rs, router, _, _ = _fleet(tiny)
+    router.drain(0)
+    assert router.draining == {0}
+    router.drain(1)                            # refused: someone serves
+    assert router.draining == {0}
+    assert router.route("a") == 1
+    router.recover(0)
+    assert not router.draining
+    assert [d[0] for d in router.decisions] == ["drain", "route",
+                                                "recover"]
+
+
+def test_router_ring_next_skips_draining(tiny):
+    cfg, params = tiny
+    clock = ReplayClock()
+    engines = [PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                                   pages_per_seq=8, num_pages=16,
+                                   clock=clock) for _ in range(3)]
+    router = SessionRouter(ReplicaSet(engines))
+    router.drain(1)
+    assert router.ring_next(0) == 2
+    assert router.ring_next(1) == 2
+    assert router.ring_next(2) == 0
+
+
+def test_router_rebalance_margin(tiny):
+    rs, router, _, _ = _fleet(tiny)
+    router.rebalance_margin = 2
+    for i in range(4):
+        router.route(f"s{i}")                  # 2 / 2
+    assert router.maybe_migrate("s0") is None  # balanced
+    router.on_session_end("s1")
+    router.on_session_end("s3")                # 2 / 0
+    assert router.maybe_migrate("s0") == 1
+    router.rebalance_margin = None
+    assert router.maybe_migrate("s2") is None  # live-only knob off
+
+
+def test_router_straggler_drain_and_recovery(tiny):
+    """Deadline blowouts drain the replica through the mitigator; its
+    consecutive-good-round forgiveness lifts the drain again."""
+    rs, router, _, _ = _fleet(tiny)
+    router.mitigator = StragglerMitigator(deadline_factor=2.0,
+                                          min_samples=4,
+                                          recover_after=2)
+    router.strike_threshold = 2
+    for _ in range(4):
+        router.observe_round(1, 0.01)          # healthy baseline
+    router.observe_round(0, 0.5)
+    assert not router.draining                 # one strike is noise
+    router.observe_round(0, 0.5)
+    assert router.draining == {0}
+    assert ("drain", 0) in router.decisions
+    # recovery: two consecutive good rounds forgive, the drain lifts
+    router.observe_round(0, 0.01)
+    assert router.draining == {0}
+    router.observe_round(0, 0.01)
+    assert not router.draining
+    assert ("recover", 0) in router.decisions
+
+
+def test_straggler_mitigator_alternating_still_accumulates():
+    sm = StragglerMitigator(deadline_factor=2.0, min_samples=4,
+                            recover_after=3)
+    for _ in range(6):
+        sm.observe("w0", 1.0)
+    # slow/fast alternation: single good rounds never erase the record
+    for _ in range(3):
+        sm.observe("w1", 10.0)
+        sm.observe("w1", 1.0)
+    assert sm.should_evict("w1", 3)
+
+
+def test_straggler_mitigator_recovers_and_forgets():
+    sm = StragglerMitigator(deadline_factor=2.0, min_samples=4,
+                            recover_after=2)
+    for _ in range(6):
+        sm.observe("w0", 1.0)
+    sm.observe("w1", 10.0)
+    sm.observe("w1", 10.0)
+    assert "w1" in sm.strikes
+    sm.observe("w1", 1.0)
+    assert "w1" in sm.strikes                  # streak of 1: not yet
+    sm.observe("w1", 1.0)
+    assert "w1" not in sm.strikes              # clean slate
+    sm.observe("w2", 10.0)
+    sm.forget("w2")
+    assert "w2" not in sm.strikes and "w2" not in sm.good_streak
+
+
+# ======================================================================
+# soaks
+# ======================================================================
+def _assert_fleet_clean(gw):
+    for e in gw.replicas:
+        e.flush_transfers()
+        e.check_invariants()
+        assert e.pool.free_pages == e.num_pages, "leaked pages"
+        assert all(s.ended for s in e.sessions.values())
+        assert not any(e.slot_state.values())
+    assert not gw.migrator.plans
+    assert not gw.router.placement
+
+
+@pytest.mark.slow
+def test_fleet_soak_live_straggler_barge_storm(tiny):
+    """24 sessions / 3 replicas under a barge storm, with replica 0
+    forced to blow its round deadline (injected lag feeding a real
+    mitigator): it must be drained, its sessions migrated off, and
+    every replica must end clean."""
+    gw = build_fleet_gateway(replicas=3, scale=40.0, slots=4,
+                             num_pages=96, model=tiny,
+                             audio_per_token_s=0.25,
+                             mitigator=StragglerMitigator(
+                                 deadline_factor=2.0, min_samples=6),
+                             strike_threshold=3)
+    gw.round_lag_s[0] = 5.0                    # the forced straggler
+    m, gw = run_fleet_workload(kind="mixed", sessions=24, barge_in=0.6,
+                               seed=2, scale=40.0, max_turns=3,
+                               max_prompt=8, max_response=8,
+                               timeout_s=300.0, gateway=gw)
+    assert 0 in gw.router._straggler_drained or 0 in gw.router.draining
+    assert ("drain", 0) in gw.router.decisions
+    assert m.migrations > 0
+    assert all(d[2] == 0 for d in gw.router.migration_decisions())
+    assert m.completed_sessions == 24
+    assert len(m.replica_occupancy) == 3
+    assert m.summary()["migration_off_path"] >= 0.0
+    _assert_fleet_clean(gw)
+
+
+@pytest.mark.slow
+def test_fleet_soak_twin_pressure_and_hangups(tiny):
+    """Virtual-time soak under tight pools: 27 sessions / 3 replicas
+    with barges and a mid-trace drain. dst-pressure cancels are
+    allowed; leaks are not."""
+    cfg, params = tiny
+
+    def factory(clock):
+        return PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                                   pages_per_seq=12, num_pages=28,
+                                   clock=clock)
+
+    # rate 1 rps keeps the *pending-protected* working set under the
+    # pool (pending turns are immune to Eq. 4 eviction — total
+    # over-commit of protected pages would deadlock any replica, fleet
+    # or not); idle sessions still pile up enough to force evictions
+    wl = WorkloadConfig(kind="mixed", num_sessions=27, seed=5,
+                        p_barge_in=0.7, arrival="poisson", rate_rps=1.0)
+    m, gw = run_fleet_replay(factory, 3, wl,
+                             ReplayConfig(max_turns=3),
+                             seed=5, drain_after_routes=(0, 9))
+    # routes after the drain avoid replica 0
+    routed = [d[2] for d in gw.router.decisions if d[0] == "route"]
+    assert 0 not in routed[9:]
+    assert gw.router.migration_decisions()
+    done, cancelled = gw.migrator.completed(), gw.migrator.cancelled()
+    assert len(done) + len(cancelled) \
+        == len(gw.router.migration_decisions())
+    # the tight pools were genuinely under pressure
+    assert any(e.kv.evicted_blocks > 0 for e in gw.replicas)
+    assert m.completed_sessions == 27
+    _assert_fleet_clean(gw)
+
+
+def test_fleet_soak_twin_smoke(tiny):
+    """Fast-lane miniature of the twin soak."""
+    cfg, params = tiny
+
+    def factory(clock):
+        return PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                                   pages_per_seq=8, num_pages=24,
+                                   clock=clock)
+
+    wl = WorkloadConfig(kind="interactive", num_sessions=6, seed=0,
+                        p_barge_in=0.5, arrival="poisson", rate_rps=4.0)
+    m, gw = run_fleet_replay(factory, 3, wl, ReplayConfig(),
+                             seed=0, drain_after_routes=(0, 6))
+    assert m.completed_sessions == 6
+    _assert_fleet_clean(gw)

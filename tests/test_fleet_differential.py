@@ -1,0 +1,201 @@
+"""Fleet router differential: live gateway vs virtual-time twin
+(ISSUE 6 satellite).
+
+The same seeded multi-replica trace is replayed through both planes:
+
+- **twin** — ``fleet/replay.py``: the fleet gateway on a driver-owned
+  virtual clock, routing the whole trace up front and pumping migration
+  plans between event delivery and rounds;
+- **live** — ``fleet/gateway.py``: the asyncio fleet gateway under real
+  in-process clients on a ``ScaledWallClock``.
+
+Wall-clock latencies differ by construction; *router decisions* must
+not. The comparison surface is the router's decision log:
+
+- the route list is identical and identically ordered (connects happen
+  in trace order in both planes — the asyncio clients connect before
+  their first await);
+- drain/recover entries are identical and identically ordered (the
+  differential injects drains deterministically via
+  ``drain_after_routes``; the straggler mitigator stays off because
+  wall time is the one signal the twin cannot reproduce);
+- migration decisions agree as a multiset and per-session as ordered
+  lists (cross-session order is not comparable: two speech starts that
+  are near-simultaneous on the wall clock may swap);
+- on barge-free traces the migrate set is exactly predictable from the
+  trace alone: every >=2-turn session round-robin-routed to the drained
+  replica, destination = ring-next.
+
+Migration *completions* are deliberately not compared: whether a barge
+lands before or after handoff is timing, not policy, and the
+cancellation rules (DESIGN.md §12) make both orders correct.
+
+A 27-example deterministic sweep runs under ``-m slow``; one smoke
+example stays in the fast lane.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving.fleet.harness import run_fleet_workload
+from repro.serving.fleet.replay import run_fleet_replay
+from repro.serving.gateway.replay import ReplayConfig
+from repro.serving.paged_engine import PagedRealtimeEngine
+from repro.serving.workload import WorkloadConfig, generate
+
+REPLICAS = 3
+NUM_PAGES = 128          # generous: dst_pressure cancels are a policy
+                         # the unit tests force; here they would make
+                         # completion timing-sensitive
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                  vocab=331)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _workload(seed, kind, sessions, barge):
+    return WorkloadConfig(kind=kind, num_sessions=sessions, seed=seed,
+                          p_barge_in=barge, arrival="poisson",
+                          rate_rps=2.0)
+
+
+def _run_twin(tiny_model, wl, seed, sessions):
+    cfg, params = tiny_model
+
+    def factory(clock):
+        return PagedRealtimeEngine(cfg, params, slots=2, page_size=8,
+                                   pages_per_seq=8, num_pages=NUM_PAGES,
+                                   clock=clock)
+
+    return run_fleet_replay(
+        factory, REPLICAS, wl,
+        ReplayConfig(max_prompt=6, max_response=6), seed=seed,
+        drain_after_routes=(0, sessions))
+
+
+def _run_live(tiny_model, seed, kind, sessions, barge):
+    return run_fleet_workload(
+        kind=kind, sessions=sessions, barge_in=barge, seed=seed,
+        scale=40.0, max_turns=2, max_prompt=6, max_response=6,
+        timeout_s=180.0, replicas=REPLICAS, slots=2,
+        num_pages=NUM_PAGES, audio_per_token_s=0.25,
+        model=tiny_model, drain_after_routes=(0, sessions))
+
+
+# ======================================================================
+# decision-log views
+# ======================================================================
+def _routes(gw):
+    return [d for d in gw.router.decisions if d[0] == "route"]
+
+
+def _drains(gw):
+    return [d for d in gw.router.decisions if d[0] in ("drain",
+                                                       "recover")]
+
+
+def _per_session_migrations(gw):
+    per = {}
+    for _, sid, src, dst in gw.router.migration_decisions():
+        per.setdefault(sid, []).append((src, dst))
+    return per
+
+
+def check_fleet_differential(tiny_model, seed, kind, sessions, barge):
+    wl = _workload(seed, kind, sessions, barge)
+    twin_m, twin = _run_twin(tiny_model, wl, seed, sessions)
+    live_m, live = _run_live(tiny_model, seed, kind, sessions, barge)
+
+    # shared schema: twin-vs-live comparison is a dict diff
+    assert set(twin_m.summary()) == set(live_m.summary())
+
+    # routes: identical, identically ordered — and round-robin, since
+    # every replica is pristine at connect time
+    tr, lr = _routes(twin), _routes(live)
+    assert tr == lr, (tr, lr)
+    assert [r[2] for r in tr] == [i % REPLICAS for i in range(sessions)]
+
+    # drains: deterministic injection fires at the same route count
+    assert _drains(twin) == _drains(live)
+
+    # migrations: multiset + per-session ordered lists
+    assert sorted(twin.router.migration_decisions()) \
+        == sorted(live.router.migration_decisions())
+    assert _per_session_migrations(twin) == _per_session_migrations(live)
+
+    # the migrate set is trace-predictable: every >=2-turn session that
+    # round-robin landed on the drained replica, and nothing else,
+    # bound for the healthy replica its admission index picks in ring
+    # order (1, 2, 1, 2, ... for drained replica 0 of 3)
+    want = {s.session_id: [(0, [1, 2][i % 2])]
+            for i, s in enumerate(generate(wl))
+            if i % REPLICAS == 0 and len(s.turns) >= 2}
+    got = _per_session_migrations(twin)
+    assert got == want, (got, want)
+
+    # on barge-free traces completion is decision: every decided
+    # migration ran to DONE in both planes (turn requests force a
+    # demanded completion; only barge/hangup/pressure may cancel)
+    if barge == 0.0:
+        for gw, m in ((twin, twin_m), (live, live_m)):
+            assert not gw.migrator.plans
+            assert not gw.migrator.cancelled()
+            assert len(gw.migrator.completed()) == len(want)
+            assert m.migrations == len(want)
+            if want:
+                assert m.migration_bytes > 0
+                assert sum(1 for t in m.turns if t.migrated) == len(want)
+                # destinations spread over the healthy replicas
+                if len(want) >= 2:
+                    assert len({d for v in want.values()
+                                for _, d in v}) > 1
+
+    # both fleets end clean: invariants green, every pool empty (the
+    # drained replica's sessions migrated away or hung up — ended
+    # sessions persist as history records, pages released)
+    for gw in (twin, live):
+        for e in gw.replicas:
+            e.flush_transfers()
+            e.check_invariants()
+            assert e.pool.free_pages == e.num_pages
+            assert all(s.ended for s in e.sessions.values())
+        # a completed migration scrubbed the source wholesale: the
+        # session record lives only on its destination
+        for p in gw.migrator.completed():
+            assert p.session_id not in gw.replicas[p.src].sessions
+            assert p.session_id in gw.replicas[p.dst].sessions
+
+
+# 27 deterministic examples (3 seeds x 3 kinds x 3 shapes), mirroring
+# the sim-vs-real differential's sweep structure
+EXAMPLES = [(seed, kind, sessions, barge)
+            for seed in range(3)
+            for kind in ("interactive", "sharegpt", "mixed")
+            for sessions, barge in ((3, 0.0), (4, 0.5), (6, 0.8))]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed,kind,sessions,barge", EXAMPLES)
+def test_fleet_differential(tiny, seed, kind, sessions, barge):
+    check_fleet_differential(tiny, seed, kind, sessions, barge)
+
+
+# one smoke example stays in the fast lane so a broken fleet harness is
+# caught even when -m "not slow" deselects the sweep
+def test_fleet_differential_smoke(tiny):
+    check_fleet_differential(tiny, 0, "interactive", 4, 0.5)
+
+
+def test_fleet_twin_is_deterministic(tiny):
+    """Two twin runs of the same trace produce byte-identical decision
+    logs — the precondition for comparing anything against it."""
+    wl = _workload(1, "mixed", 5, 0.5)
+    _, a = _run_twin(tiny, wl, 1, 5)
+    _, b = _run_twin(tiny, wl, 1, 5)
+    assert a.router.decisions == b.router.decisions
+    assert a.router.decisions
