@@ -180,4 +180,38 @@ def run(quick: bool = False) -> dict:
         f"migrated_turns={len(mig_ttfp)};"
         f"non_migrated_ttfp_us={fmt(mean(base_ttfp) * 1e6, 1)};"
         f"ratio={fmt(mean(mig_ttfp) / max(1e-9, mean(base_ttfp)), 2)}")
+
+    # -------------------------------------------------------- prefix
+    # shared-prefix workload (ISSUE 7 acceptance): >=8 sessions in one
+    # prompt family (48-token shared system prompt), barge-in off so
+    # both runs see the same trace content. The cached gateway attaches
+    # each later session to the family's committed pages — the
+    # prefix_hit_frac row is the acceptance number (target >= 0.5),
+    # and turn-start TTFP rides next to the no-sharing control's.
+    pfx_kw = dict(policy="liveserve", sessions=8, barge_in=0.0, seed=5,
+                  rate_rps=4.0, max_turns=2, max_prompt=8,
+                  max_response=6, prompt_families=1, family_prefix_len=48,
+                  timeout_s=600)
+    pfx_geom = dict(scale=4.0, model=model, frontier_cap_s=3.0,
+                    round_token_budget=16, prefill_chunk=16,
+                    page_size=8, pages_per_seq=12, slots=4,
+                    audio_per_token_s=apt)
+    gw = build_gateway(prefix_cache=True, **pfx_geom)
+    m, gw = run_gateway_workload(gateway=gw, **pfx_kw)
+    cached = m.summary()
+    gw2 = build_gateway(prefix_cache=False, **pfx_geom)
+    m2, gw2 = run_gateway_workload(gateway=gw2, **pfx_kw)
+    control = m2.summary()
+    out["prefix_cached"], out["prefix_control"] = cached, control
+    row("gateway/prefix_hit_frac", cached["prefix_hit_frac"] * 100.0,
+        f"hit_tokens={cached['prefix_hit_tokens']};"
+        f"pages_shared={cached['pages_shared']};"
+        f"cow_copies={gw.engine.cow_copies};"
+        f"sessions=8;family_prefix=48;"
+        f"control_hit_frac={fmt(control['prefix_hit_frac'], 3)}")
+    row("gateway/prefix_turn_start_ttfp", cached["p90_ttfp"] * 1e6,
+        f"control_p90_us={fmt(control['p90_ttfp'] * 1e6, 1)};"
+        f"p50_us={fmt(cached['p50_ttfp'] * 1e6, 1)};"
+        f"control_p50_us={fmt(control['p50_ttfp'] * 1e6, 1)};"
+        f"turns={cached['turns']}")
     return out

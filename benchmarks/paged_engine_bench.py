@@ -110,6 +110,7 @@ def run(quick: bool = False) -> None:
 
     _fused_prefill_section(cfg, params, quick)
     _overlap_section(cfg, params, quick)
+    _prefix_section(cfg, params, quick)
 
 
 def _fused_prefill_section(cfg, params, quick: bool) -> None:
@@ -157,6 +158,61 @@ def _fused_prefill_section(cfg, params, quick: bool) -> None:
         (1.0 / stats["tokenwise"] - 1.0 / stats["fused"]) * 1e6,
         f"fused_over_tokenwise={stats['fused'] / stats['tokenwise']:.2f};"
         f"prompt={P};chunk={chunk}")
+
+
+def _prefix_section(cfg, params, quick: bool) -> None:
+    """Shared-prefix KV capacity (ISSUE 7, DESIGN.md §13): sessions of
+    one prompt family (identical 32-token system prompt, unique
+    4-token suffix) are admitted and pinned hot until the fixed pool
+    refuses the next one. With the radix prefix cache each new session
+    attaches to the family's committed pages and pays only its private
+    suffix; without it every session carries full private copies. The
+    row reports resident sessions cached vs control (the ISSUE 7
+    acceptance: strictly more) and the attach-time prefill saving."""
+    from repro.kvcache.paged import OutOfPages
+    from repro.serving.paged_engine import PagedRealtimeEngine
+
+    rng = np.random.default_rng(3)
+    fam = rng.integers(0, cfg.vocab_size, size=32)
+    suffixes = rng.integers(0, cfg.vocab_size, size=(16, 4))
+
+    def fill(prefix: bool):
+        eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=8,
+                                  pages_per_seq=8, num_pages=16,
+                                  fused_step=True, prefix_cache=prefix)
+        resident, ttfp = 0, []
+        for i in range(16):
+            t0 = time.perf_counter()
+            try:
+                eng.add_session(f"s{i}",
+                                np.concatenate([fam, suffixes[i]]),
+                                max_new_tokens=2)
+            except OutOfPages:
+                break
+            ttfp.append(time.perf_counter() - t0)
+            eng.run_to_completion()
+            eng.kv.pin(f"s{i}")          # hold every session hot
+            resident += 1
+        eng.check_invariants()
+        # sessions after the first skip the family prefill entirely;
+        # the second is excluded too — the first attacher pays the
+        # one-time jit compile of the small suffix-only query bucket
+        later = ttfp[2:] or [0.0]
+        return resident, sum(later) / len(later) * 1e6, eng
+
+    n_cached, us_cached, eng = fill(True)
+    n_control, us_control, _ = fill(False)
+    hit = eng.prefix_cache.hit_tokens
+    lookups = eng.prefix_cache.lookups
+    row("paged_engine/prefix_resident_sessions", us_cached,
+        f"cached={n_cached};control={n_control};pool_pages=16;"
+        f"family_prefix=32;hit_tokens={hit};lookups={lookups}")
+    row("paged_engine/prefix_attach_turn_start",
+        us_cached,
+        f"control_us={fmt(us_control, 1)};"
+        f"speedup={us_control / max(us_cached, 1e-9):.2f};"
+        f"cow_copies={eng.cow_copies};"
+        f"peak_shared={eng.peak_shared_pages}")
 
 
 def _overlap_section(cfg, params, quick: bool) -> None:

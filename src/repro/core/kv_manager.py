@@ -34,15 +34,23 @@ class SessionKV:
     protected_until: float = -1.0  # preload protection TTL
     last_access: float = 0.0
     discarded: bool = False      # 'none' policy: KV dropped, must re-prefill
+    # Shared-prefix accounting (DESIGN.md §13): `shared_blocks` are
+    # attached prefix blocks charged to another accountant (the owner
+    # session or the prefix cache); `shared_pinned_blocks` are OWN
+    # resident blocks some other session shares — a page a sharer still
+    # needs hot never offloads, so they leave the evictable budget.
+    shared_blocks: int = 0
+    shared_pinned_blocks: int = 0
 
     @property
     def dram_blocks(self) -> int:
-        return self.total_blocks - self.hbm_blocks
+        return max(0, self.total_blocks - self.shared_blocks
+                   - self.hbm_blocks)
 
     def evictable(self, now: float) -> int:
         if self.pinned or now < self.protected_until:
             return 0
-        return self.hbm_blocks
+        return max(0, self.hbm_blocks - self.shared_pinned_blocks)
 
 
 @dataclass
@@ -122,6 +130,11 @@ class KVManager:
         self._on_cancel_reload = None
         self._on_finish_transfers = None
         self._pending_offload = None
+        # prefix-cache hooks (DESIGN.md §13): blocks kept alive purely
+        # by the radix index (refcount 0, owner None) are charged here
+        self._cache_reclaim = None
+        self._cache_reclaimable = None
+        self.cached_blocks = 0
         # telemetry
         self.evicted_blocks = 0
         self.reloaded_blocks = 0
@@ -160,6 +173,15 @@ class KVManager:
         self._on_finish_transfers = on_finish_transfers
         self._pending_offload = pending_offload
 
+    def set_cache_hooks(self, *, reclaim=None, reclaimable=None) -> None:
+        """Prefix-cache hooks: reclaim(n, now) -> blocks frees up to n
+        orphaned cache-held pages (cheapest victims: no live owner, no
+        host copy to write, only a future prefix miss); reclaimable(now)
+        -> blocks reports how many it *could* free, counted by
+        admission control next to session-evictable blocks."""
+        self._cache_reclaim = reclaim
+        self._cache_reclaimable = reclaimable
+
     @property
     def physical_pages(self) -> bool:
         """True when a data plane moves real pages on our decisions."""
@@ -184,7 +206,7 @@ class KVManager:
     @property
     def used_blocks(self) -> int:
         return sum(s.hbm_blocks for s in self.sessions.values()) \
-            + self.working_blocks
+            + self.working_blocks + self.cached_blocks
 
     @property
     def free_blocks(self) -> int:
@@ -204,6 +226,8 @@ class KVManager:
             if self.monitor is not None and self.monitor.immediate_reuse(sid):
                 continue
             total += kv.evictable(now)
+        if self._cache_reclaimable is not None:
+            total += self._cache_reclaimable(now)
         return total
 
     def blocks_of(self, tokens: int) -> int:
@@ -318,11 +342,22 @@ class KVManager:
         return take
 
     # ------------------------------------------------------------- alloc
-    def try_allocate_working(self, blocks: int, now: float) -> bool:
-        """Blocks for live request growth (pinned until released)."""
+    def _make_room(self, blocks: int, now: float) -> bool:
+        """Free capacity for `blocks`: reclaim orphaned prefix-cache
+        pages first (zero transfer cost, only a future prefix miss —
+        strictly cheaper than evicting a session that must reload),
+        then run the Eq.4 eviction pass. Session-victim *order* is
+        unchanged by the cache tier."""
+        if self.free_blocks < blocks and self._cache_reclaim is not None:
+            self.cached_blocks -= self._cache_reclaim(
+                blocks - self.free_blocks, now)
         if self.free_blocks < blocks:
             self.evict(blocks - self.free_blocks, now)
-        if self.free_blocks < blocks:
+        return self.free_blocks >= blocks
+
+    def try_allocate_working(self, blocks: int, now: float) -> bool:
+        """Blocks for live request growth (pinned until released)."""
+        if not self._make_room(blocks, now):
             return False
         self.working_blocks += blocks
         return True
@@ -352,7 +387,10 @@ class KVManager:
         blocks = self.blocks_of(context_tokens)
         grow = blocks - kv.total_blocks
         kv.total_blocks = blocks
-        kv.hbm_blocks = min(kv.hbm_blocks + max(0, grow), blocks)
+        # own resident blocks can never exceed what isn't an attached
+        # shared prefix (those stay charged to their owner / the cache)
+        kv.hbm_blocks = min(kv.hbm_blocks + max(0, grow),
+                            blocks - kv.shared_blocks)
         kv.pinned = False
         kv.discarded = False
         kv.last_access = now
@@ -388,7 +426,7 @@ class KVManager:
             # back must never be selected as its own victim
             was_pinned = kv.pinned
             kv.pinned = True
-            self.evict(n - self.free_blocks, now)
+            self._make_room(n, now)
             kv.pinned = was_pinned
         if self.free_blocks < n:
             return None
@@ -429,6 +467,14 @@ class KVManager:
         return self._on_finish_transfers(sid, now)
 
     def protect(self, sid: str, now: float) -> None:
+        """Preload-protection TTL (§5.3). Shared-prefix rule (DESIGN.md
+        §13): a shared page is protected as long as ANY sharer needs it
+        — while sharers live that is structural (`shared_pinned_blocks`
+        keeps the page out of every evictable budget, regardless of
+        TTLs), and when the last sharer detaches the radix index banks
+        ``max`` over the sharers' `protected_until` values, so the
+        orphaned page honors the longest outstanding TTL before
+        `reclaim` may free it."""
         kv = self.session(sid)
         protected = sum(1 for s in self.sessions.values()
                         if s.protected_until > now)

@@ -46,6 +46,8 @@ class Request:
     last_scheduled: float = -1.0
     reload_stall_s: float = 0.0         # on-path KV reload charged to TTFP
     reload_off_path_s: float = 0.0      # reload seconds hidden off-path
+    prefix_hit_tokens: int = 0          # prompt tokens served from the
+    #                                     shared prefix cache (skip-ahead)
 
     @property
     def total_context(self) -> int:
@@ -81,3 +83,7 @@ class Session:
     # cumulative context tokens cached at the LLM stage after each turn
     context_tokens: int = 0
     kv_bytes_per_token: float = 0.0
+    # shared-system-prompt family (-1: none): sessions in the same
+    # family open with an identical seeded prefix, so seeded traces
+    # exercise cross-session prefix sharing deterministically
+    family: int = -1

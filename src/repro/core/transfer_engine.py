@@ -42,6 +42,13 @@ chunked, round-interleaved jobs:
 This module is pure host-side bookkeeping: the physical page movement
 lives in the io callbacks the engine registers (``set_io``), so the
 ledger is reusable by any data plane that owns a page store.
+
+Shared pages (DESIGN.md §13) never enter the ledger: a page another
+live session is attached to must stay hot, so the engine's offload
+picker skips refcount>1 pages and ``PagedPool.mark_offloading`` asserts
+refcount==1 — by the time a chunk is enqueued here its pages are
+provably private. Fleet migration deep-copies shared pages to host
+stacks *before* building its MIGRATE chunks for the same reason.
 """
 from __future__ import annotations
 

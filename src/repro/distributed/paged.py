@@ -28,6 +28,15 @@ serving; weight tensor-parallelism composes later via
 plane (pool, block tables, KV manager) is identical with and without a
 mesh and the offload/reload hooks move *sharded* pages through plain
 ``np.asarray`` gathers / ``device_put`` scatters.
+
+Cross-session page sharing (DESIGN.md §13) is placement-stable by
+construction: attaching to a cached prefix only repoints block tables
+at existing physical ids — no page contents move, so each shard keeps
+serving exactly the head/slot slice it already owns. COW allocates a
+fresh page whose writes land through the same re-committed functional
+updates; shared pages never enter the transfer ledger (the pool refuses
+to mark a refcount>1 page offloading), so sharing cannot strand a
+shard's slice on the host.
 """
 from __future__ import annotations
 

@@ -20,6 +20,18 @@ or page slots) are never indexed here. ``offload_suffix``'s
 scatter writes it back through the same functional update, so the DRAM
 tier always stores whole logical pages and an engine can evict on one
 mesh and (after a checkpoint-style move) reload on another.
+
+Shared-prefix pages (DESIGN.md §13): every allocated physical page
+carries a refcount — the number of sequences whose page list references
+it. ``attach_prefix`` points a fresh sequence at another sequence's
+committed pages (refcount goes up, no bytes move); ``cow`` swaps a
+shared page for a private copy when a writer must append into it. Each
+page is *charged* to exactly one accountant: its owner session
+(``page_owner[p] == sid``) or the prefix cache (``page_owner[p] is
+None`` — a COW'd-away or orphaned page kept alive by sharers or by the
+radix index, ``cache_held``). The transfer tiers only ever move private
+pages: ``mark_offloading`` asserts refcount == 1 and not cache-held, so
+a page some sharer still needs hot can never leave HBM.
 """
 from __future__ import annotations
 
@@ -63,11 +75,33 @@ class PagedPool:
         self.page_size = page_size
         self.free: List[int] = list(range(num_pages - 1, -1, -1))
         self.seqs: Dict[str, SeqPages] = {}
+        # Shared-prefix bookkeeping (DESIGN.md §13). Every *allocated*
+        # physical page has a refcount entry (== number of sequence page
+        # lists referencing it; 0 only for pages kept alive purely by
+        # the radix index) and a charging owner: the session whose KV
+        # accountant pays for it, or None once the owner released/COW'd
+        # it away (the prefix cache pays — `cached_blocks` in
+        # KVManager). `cache_held` marks pages registered in the radix
+        # index: they survive refcount 0 until the cache forgets them.
+        self.refcount: Dict[int, int] = {}
+        self.page_owner: Dict[int, Optional[str]] = {}
+        self.cache_held: set = set()
 
     # ------------------------------------------------------------ alloc
     @property
     def free_pages(self) -> int:
         return len(self.free)
+
+    def _alloc_page(self, seq_id: str) -> int:
+        p = self.free.pop()
+        self.refcount[p] = 1
+        self.page_owner[p] = seq_id
+        return p
+
+    def _free_slot(self, p: int) -> None:
+        del self.refcount[p]
+        del self.page_owner[p]
+        self.free.append(p)
 
     def seq(self, seq_id: str) -> SeqPages:
         s = self.seqs.get(seq_id)
@@ -88,7 +122,7 @@ class PagedPool:
         for _ in range(max(0, need)):
             if not self.free:
                 raise OutOfPages(f"pool exhausted growing {seq_id}")
-            p = self.free.pop()
+            p = self._alloc_page(seq_id)
             s.pages.append(p)
             out.append(p)
         s.length = max(s.length, new_length)
@@ -110,18 +144,42 @@ class PagedPool:
             phys = s.pages.pop()
             s.offloaded.pop(len(s.pages), None)
             if phys >= 0:
-                self.free.append(phys)
+                assert self.refcount[phys] == 1 \
+                    and phys not in self.cache_held \
+                    and self.page_owner[phys] == seq_id, \
+                    f"{seq_id}: trim reached a shared/cached page " \
+                    f"{phys} — only private lookahead pages trim"
+                self._free_slot(phys)
                 freed += 1
         s.length = min(s.length, length)
         return freed
 
-    def release(self, seq_id: str) -> None:
+    def release(self, seq_id: str) -> Dict[str, int]:
+        """Drop a sequence's references. Returns an accounting report:
+        ``freed_own`` private pages returned to the free list,
+        ``freed_orphan`` cache-charged (owner-less) pages whose last
+        reference died here, ``orphaned`` own pages that survive via
+        other sharers or the radix index — their charge moves to the
+        prefix cache (owner -> None)."""
         s = self.seqs.pop(seq_id, None)
+        rep = {"freed_own": 0, "freed_orphan": 0, "orphaned": 0}
         if s is None:
-            return
+            return rep
         for p in s.pages:
-            if p >= 0:
-                self.free.append(p)
+            if p < 0:
+                continue
+            owner = self.page_owner[p]
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0 and p not in self.cache_held:
+                self._free_slot(p)
+                if owner is None:
+                    rep["freed_orphan"] += 1
+                else:
+                    rep["freed_own"] += 1
+            elif owner == seq_id:
+                self.page_owner[p] = None
+                rep["orphaned"] += 1
+        return rep
 
     def adopt(self, seq_id: str, n_pages: int, length: int,
               offloaded: Dict[int, np.ndarray]) -> SeqPages:
@@ -138,6 +196,94 @@ class PagedPool:
                      offloaded=dict(offloaded))
         self.seqs[seq_id] = s
         return s
+
+    # ------------------------------------------------- shared prefixes
+    def attach_prefix(self, seq_id: str, phys: List[int],
+                      length: int) -> None:
+        """Point a FRESH sequence at already-resident pages holding its
+        first ``length`` tokens (prefix-cache hit): each page's refcount
+        goes up, no bytes move, and the pages stay charged to whoever
+        pays for them today — the attacher's accountant records them as
+        ``shared_blocks``."""
+        s = self.seq(seq_id)
+        assert not s.pages and s.length == 0 and not s.offloaded, \
+            f"{seq_id}: attach_prefix only on an empty sequence"
+        for p in phys:
+            assert p in self.refcount, f"page {p} not allocated"
+            self.refcount[p] += 1
+        s.pages.extend(phys)
+        s.length = length
+
+    def cow(self, seq_id: str, li: int):
+        """Copy-on-write: the writer must append into logical page
+        ``li`` but shares its physical page. Allocate a private page,
+        repoint, drop the shared ref. Returns (old_phys, new_phys,
+        was_owner); the caller copies the device bytes old -> new and,
+        when ``was_owner``, re-charges the old page to the prefix cache
+        (its owner slot becomes None)."""
+        s = self.seqs[seq_id]
+        old = s.pages[li]
+        assert old >= 0 and li not in s.loading and li not in s.offloading
+        assert self.refcount[old] > 1, \
+            f"{seq_id}: page {old} not shared — write in place"
+        if not self.free:
+            raise OutOfPages(f"pool exhausted COWing {seq_id}")
+        new = self._alloc_page(seq_id)
+        s.pages[li] = new
+        self.refcount[old] -= 1
+        was_owner = self.page_owner[old] == seq_id
+        if was_owner:
+            self.page_owner[old] = None
+        return old, new, was_owner
+
+    def detach_page(self, seq_id: str, li: int):
+        """Drop one page reference without the offload machinery
+        (migration deep-copy: the departing session keeps a host copy
+        in ``offloaded`` and leaves the physical page to its sharers /
+        the cache). Returns (was_owner, freed) — freed only when the
+        last reference was this one and the radix index does not hold
+        the page either."""
+        s = self.seqs[seq_id]
+        p = s.pages[li]
+        assert p >= 0 and li not in s.loading and li not in s.offloading
+        was_owner = self.page_owner[p] == seq_id
+        self.refcount[p] -= 1
+        freed = False
+        if self.refcount[p] == 0 and p not in self.cache_held:
+            self._free_slot(p)
+            freed = True
+        elif was_owner:
+            self.page_owner[p] = None
+        s.pages[li] = -1
+        return was_owner, freed
+
+    def cache_release(self, phys: List[int]) -> int:
+        """The radix index forgot these pages: any that no sequence
+        still references free now. Returns pages freed (all of them had
+        owner None — the cache was paying)."""
+        freed = 0
+        for p in phys:
+            self.cache_held.discard(p)
+            if self.refcount.get(p) == 0:
+                assert self.page_owner[p] is None
+                self._free_slot(p)
+                freed += 1
+        return freed
+
+    def shared_charged_pages(self, seq_id: str) -> int:
+        """Own pages other sequences currently share (refcount > 1 and
+        charged to this sequence) — pinned in HBM while any sharer
+        needs them, so excluded from this session's evictable count."""
+        s = self.seqs.get(seq_id)
+        if s is None:
+            return 0
+        return sum(1 for p in s.pages
+                   if p >= 0 and self.refcount[p] > 1
+                   and self.page_owner[p] == seq_id)
+
+    def shared_pages(self) -> int:
+        """Physical pages with more than one live reference."""
+        return sum(1 for c in self.refcount.values() if c > 1)
 
     # ------------------------------------------------------------ tables
     def block_table(self, seq_ids: List[str], pages_per_seq: int,
@@ -179,7 +325,7 @@ class PagedPool:
         if len(self.free) < len(logical):
             raise OutOfPages(f"pool exhausted reloading {seq_id}")
         for li in logical:
-            s.pages[li] = self.free.pop()
+            s.pages[li] = self._alloc_page(seq_id)
             s.loading.add(li)
         return logical
 
@@ -214,7 +360,7 @@ class PagedPool:
         take = sorted(s.loading) if logical is None else list(logical)
         for li in take:
             assert li in s.loading, f"{seq_id}: page {li} not loading"
-            self.free.append(s.pages[li])
+            self._free_slot(s.pages[li])
             s.pages[li] = -1
             s.loading.remove(li)
         return len(take)
@@ -225,13 +371,23 @@ class PagedPool:
         are loading pages (cancel the in-flight reload — free
         immediately, zero copy) and ``offload_lis`` are resident pages
         (need a device->host copy). Pages already offloading are
-        skipped — their blocks were accounted by an earlier pass."""
+        skipped — their blocks were accounted by an earlier pass — and
+        so is any page this sequence does not privately own: a page
+        with refcount > 1 (a sharer still needs it hot) or charged to
+        another accountant (an attached prefix — the owner session or
+        the prefix cache pays for it, and this session has no host copy
+        to write). The caller's evictable budget already excludes both
+        (``hbm - shared_pinned`` counts exactly the private own
+        pages)."""
         s = self.seq(seq_id)
         cancel_lis, offload_lis = [], []
         for li in range(len(s.pages) - 1, -1, -1):
             if len(cancel_lis) + len(offload_lis) >= n_pages:
                 break
             if s.pages[li] < 0 or li in s.offloading:
+                continue
+            if self.refcount[s.pages[li]] > 1 \
+                    or self.page_owner[s.pages[li]] != seq_id:
                 continue
             if li in s.loading:
                 cancel_lis.append(li)
@@ -247,6 +403,11 @@ class PagedPool:
             assert s.pages[li] >= 0 and li not in s.loading \
                 and li not in s.offloading, \
                 f"{seq_id}: page {li} not plain-resident"
+            assert self.refcount[s.pages[li]] == 1 \
+                and s.pages[li] not in self.cache_held, \
+                f"{seq_id}: page {s.pages[li]} is shared/cached — " \
+                "never offload a page a sharer still needs hot " \
+                "(forget it in the radix index first)"
             s.offloading.add(li)
 
     def complete_offload(self, seq_id: str,
@@ -257,7 +418,7 @@ class PagedPool:
         for li, host in copies.items():
             assert li in s.offloading, f"{seq_id}: page {li} not offloading"
             s.offloaded[li] = host
-            self.free.append(s.pages[li])
+            self._free_slot(s.pages[li])
             s.pages[li] = -1
             s.offloading.remove(li)
         return len(copies)
@@ -328,4 +489,6 @@ class PagedPool:
                                  for s in self.seqs.values()),
             "offloading_pages": sum(len(s.offloading)
                                     for s in self.seqs.values()),
+            "shared_pages": self.shared_pages(),
+            "cached_pages": len(self.cache_held),
         }

@@ -70,6 +70,20 @@ def main() -> None:
                          "(DESIGN.md §9). On CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
     # --engine live only
+    ap.add_argument("--prefix-cache", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="live engine: share committed KV pages across "
+                         "sessions with identical prompt prefixes — "
+                         "refcounted copy-on-write pages behind a radix "
+                         "prefix index (DESIGN.md §13). Off by default "
+                         "(the bit-exact no-sharing control)")
+    ap.add_argument("--prompt-families", type=int, default=None,
+                    help="live engine: assign sessions round-robin to K "
+                         "shared-system-prompt families (workload knob "
+                         "that makes --prefix-cache hits observable)")
+    ap.add_argument("--family-prefix-len", type=int, default=None,
+                    help="live engine: shared prefix tokens per family "
+                         "(with --prompt-families)")
     ap.add_argument("--clock-scale", type=float, default=None,
                     help="live engine: wall-clock speedup factor")
     ap.add_argument("--slots", type=int, default=None,
@@ -93,7 +107,8 @@ def main() -> None:
     if args.engine != "live":
         live_only = [f"--{f.replace('_', '-')}" for f in
                      ("clock_scale", "slots", "kv_pages",
-                      "preload_chunks", "replicas")
+                      "preload_chunks", "replicas", "prefix_cache",
+                      "prompt_families", "family_prefix_len")
                      if getattr(args, f) is not None]
         if live_only:
             ap.error(f"{', '.join(live_only)} only apply to "
@@ -166,6 +181,16 @@ def main() -> None:
             preload_chunks=(args.preload_chunks
                             if args.preload_chunks is not None else 1),
             fused_step=args.fused_step,
+            prefix_cache=bool(args.prefix_cache),
+            prompt_families=(args.prompt_families
+                             if args.prompt_families is not None else 0),
+            family_prefix_len=(args.family_prefix_len
+                               if args.family_prefix_len is not None
+                               else 0),
+            # the family prefix rides on top of the per-turn prompt
+            # draw, so grow each session's context window to fit it
+            # (page_size 8, default pages_per_seq 8)
+            pages_per_seq=8 + -(-(args.family_prefix_len or 0) // 8),
             frontier_cap_s=3.0 if system == "liveserve" else None)
         if replicas > 1:
             from repro.serving.fleet import run_fleet_workload

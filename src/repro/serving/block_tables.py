@@ -12,6 +12,13 @@ plane (DESIGN.md §9): they index the unsharded physical-page dim, so
 one table drives all shards; ``LayerStackedPages`` works unchanged on a
 sharded store because its reads gather (``np.asarray``) and its writes
 are functional updates whose placement the engine re-commits.
+
+Shared-prefix attach (DESIGN.md §13) needs nothing new here: a session
+that attached to cached pages simply lists those physical ids in its
+block table like any other pages, and the fused plane's per-row
+``q_start`` already renders prefill rows from an arbitrary offset — the
+attacher's first prefilled token lands mid-sequence with the shared
+pages attended read-only, no kernel or table-shape change.
 """
 from __future__ import annotations
 

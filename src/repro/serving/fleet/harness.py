@@ -35,6 +35,7 @@ def build_fleet_gateway(*, replicas: int = 3, policy: str = "liveserve",
                         model: Optional[tuple] = None, mesh=None,
                         seed: int = 0, preload_chunks: int = 1,
                         fused_step: bool = True,
+                        prefix_cache: bool = False,
                         interconnect_gb_s: float = 50.0,
                         mitigator: Optional[StragglerMitigator] = None,
                         strike_threshold: int = 3,
@@ -54,7 +55,8 @@ def build_fleet_gateway(*, replicas: int = 3, policy: str = "liveserve",
                             pages_per_seq=pages_per_seq,
                             num_pages=num_pages, clock=clock, mesh=mesh,
                             transfer_chunks_per_round=preload_chunks,
-                            fused_step=fused_step)
+                            fused_step=fused_step,
+                            prefix_cache=prefix_cache)
         for _ in range(replicas)]
     # one warm-up warms the fleet: replicas share the jitted step
     # through the config-keyed cache
@@ -77,6 +79,8 @@ def run_fleet_workload(*, policy: str = "liveserve",
                        scale: float = 8.0, max_turns: int = 2,
                        max_prompt: int = 16, max_response: int = 12,
                        speech_scale: float = 1.0,
+                       prompt_families: int = 0,
+                       family_prefix_len: int = 0,
                        gateway: Optional[FleetGateway] = None,
                        timeout_s: Optional[float] = None,
                        **gw_kw) -> Tuple[Metrics, FleetGateway]:
@@ -93,4 +97,6 @@ def run_fleet_workload(*, policy: str = "liveserve",
         seed=seed, arrival=arrival, rate_rps=rate_rps, scale=scale,
         max_turns=max_turns, max_prompt=max_prompt,
         max_response=max_response, speech_scale=speech_scale,
+        prompt_families=prompt_families,
+        family_prefix_len=family_prefix_len,
         gateway=gateway, timeout_s=timeout_s)

@@ -26,7 +26,7 @@ from repro.serving.gateway.events import (AudioChunk, BargeIn, Hangup,
                                           SessionClosed, SpeechEnd,
                                           SpeechStart, TurnDone,
                                           TurnRequest, UserAudio)
-from repro.serving.workload import WorkloadConfig, generate
+from repro.serving.workload import WorkloadConfig, family_prefix, generate
 
 
 @dataclass
@@ -47,10 +47,17 @@ async def _drive_session(gateway, clock, s: Session,
     sid = s.session_id
     await clock.sleep(max(0.0, s.arrival_time - clock.now()))
     turns = s.turns[:cfg.max_turns]
+    fam = (family_prefix(cfg.workload, s.family, cfg.vocab, cfg.seed)
+           if s.family >= 0 and cfg.workload.family_prefix_len > 0
+           else None)
     for ti, turn in enumerate(turns):
         prompt = rng.integers(0, cfg.vocab,
                               size=max(1, min(turn.prompt_len,
                                               cfg.max_prompt)))
+        if fam is not None and ti == 0:
+            # shared system prompt rides unclamped ahead of the draw —
+            # the exact splice the replay twin performs
+            prompt = np.concatenate([fam, prompt.astype(np.int32)])
         n_tokens = max(2, min(turn.response_tokens, cfg.max_response))
         speech_dur = max(0.05, (turn.speech_end - turn.speech_start)
                          * cfg.speech_scale)

@@ -122,6 +122,10 @@ def record_admitted_turn(rec, r: Request) -> None:
     sim/real differential cannot drift field-by-field."""
     rec.reload_stall_s = r.reload_stall_s
     rec.reload_off_path_s = r.reload_off_path_s
+    rec.prefix_hit_tokens = r.prefix_hit_tokens
+    # prompt_len counts only the tokens left to prefill after a prefix
+    # attach; the record keeps the client-visible total
+    rec.prompt_tokens = r.prompt_len + r.prefix_hit_tokens
 
 
 def control_round(eng, scheduler, pending, *, token_budget: int,
@@ -251,6 +255,9 @@ class RealtimeGateway:
 
     def metrics(self) -> Metrics:
         self._metrics.sim_end = self.clock.now()
+        self._metrics.pages_shared = max(
+            (getattr(e, "peak_shared_pages", 0) for e in self._engines()),
+            default=0)
         return self._metrics
 
     # ------------------------------------------------------------ records

@@ -79,7 +79,8 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                   model: Optional[tuple] = None,
                   mesh=None, seed: int = 0,
                   preload_chunks: int = 1,
-                  fused_step: bool = True) -> RealtimeGateway:
+                  fused_step: bool = True,
+                  prefix_cache: bool = False) -> RealtimeGateway:
     """``mesh``: a ('data','model') jax mesh shards the engine's page
     store over 'model' (DESIGN.md §9) — on a laptop run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
@@ -97,7 +98,8 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                               num_pages=num_pages, clock=clock,
                               mesh=mesh,
                               transfer_chunks_per_round=preload_chunks,
-                              fused_step=fused_step)
+                              fused_step=fused_step,
+                              prefix_cache=prefix_cache)
     _warm_engine(eng, min(prefill_chunk, round_token_budget))
     gw = RealtimeGateway(eng, cfg=GatewayConfig(
         policy=policy, audio_per_token_s=audio_per_token_s,
@@ -114,6 +116,8 @@ def run_gateway_workload(*, policy: str = "liveserve",
                          scale: float = 8.0, max_turns: int = 2,
                          max_prompt: int = 16, max_response: int = 12,
                          speech_scale: float = 1.0,
+                         prompt_families: int = 0,
+                         family_prefix_len: int = 0,
                          gateway: Optional[RealtimeGateway] = None,
                          timeout_s: Optional[float] = None,
                          **gw_kw) -> Tuple[Metrics, RealtimeGateway]:
@@ -135,7 +139,9 @@ def run_gateway_workload(*, policy: str = "liveserve",
                            **gw_kw)
     wl = WorkloadConfig(kind=kind, num_sessions=sessions, seed=seed,
                         p_barge_in=barge_in, arrival=arrival,
-                        rate_rps=rate_rps)
+                        rate_rps=rate_rps,
+                        prompt_families=prompt_families,
+                        family_prefix_len=family_prefix_len)
     lcfg = LoadGenConfig(workload=wl, vocab=gw.engine.cfg.vocab_size,
                          max_prompt=max_prompt, max_response=max_response,
                          max_turns=max_turns,

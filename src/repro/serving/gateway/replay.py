@@ -35,7 +35,7 @@ from repro.serving.engine import RoundLimitExceeded
 from repro.serving.gateway.gateway import (control_round,
                                            record_admitted_turn)
 from repro.serving.metrics import Metrics, TurnRecord
-from repro.serving.workload import WorkloadConfig, generate
+from repro.serving.workload import WorkloadConfig, family_prefix, generate
 
 
 class ReplayClock:
@@ -141,11 +141,19 @@ class ReplayGateway:
         self._turns: Dict[str, list] = {}
         for i, s in enumerate(self._trace):
             rng = np.random.default_rng([seed, i])
+            fam = (family_prefix(workload, s.family,
+                                 self.eng.cfg.vocab_size, seed)
+                   if s.family >= 0 and workload.family_prefix_len > 0
+                   else None)
             lst = []
             for turn in s.turns[:self.cfg.max_turns]:
                 prompt = rng.integers(
                     0, self.eng.cfg.vocab_size,
                     size=max(1, min(turn.prompt_len, self.cfg.max_prompt)))
+                if fam is not None and turn.index == 0:
+                    # the shared system prompt rides UNCLAMPED ahead of
+                    # the per-turn draw — same splice as client.py
+                    prompt = np.concatenate([fam, prompt])
                 n_tokens = max(2, min(turn.response_tokens,
                                       self.cfg.max_response))
                 speech_dur = max(0.05, turn.speech_end - turn.speech_start)
@@ -382,6 +390,9 @@ class ReplayGateway:
                         "replay wedged: live work that never reschedules")
                 continue
         self.metrics.sim_end = self.clock.now()
+        self.metrics.pages_shared = max(
+            (getattr(e, "peak_shared_pages", 0) for e in self._engines()),
+            default=0)
         return self.metrics
 
 

@@ -31,6 +31,10 @@ class TurnRecord:
     barged: bool = False
     reload_stall_s: float = 0.0            # on-path (turn-start) reload
     reload_off_path_s: float = 0.0         # reload hidden off the path
+    prefix_hit_tokens: int = 0             # prompt tokens attached from the
+    #                                        shared prefix cache (no prefill)
+    prompt_tokens: int = 0                 # total prompt tokens this turn
+    #                                        (prefilled + prefix hits)
     completed: bool = False
     finish_time: float = 0.0
     migrated: bool = False                 # turn started on a replica the
@@ -59,6 +63,9 @@ class Metrics:
     migration_on_path_s: float = 0.0       # charged to a turn start
     migration_off_path_s: float = 0.0      # hidden in the speech window
     replica_occupancy: List[float] = field(default_factory=list)
+    # shared-prefix fields (zero when the prefix cache is off, keeping
+    # the sim/gateway summary schema a strict dict diff)
+    pages_shared: int = 0                  # peak physical pages at rc > 1
 
     def ttfps(self):
         return sorted(t.ttfp for t in self.turns if t.ttfp is not None)
@@ -112,6 +119,16 @@ class Metrics:
             return 0.0
         return self.migration_off_path_s / tot
 
+    def prefix_hit_frac(self) -> float:
+        """Fraction of all prompt tokens served by attaching to the
+        shared prefix cache instead of prefilling. Same 0.0-not-NaN
+        convention as ``reload_overlap_frac``."""
+        hit = sum(t.prefix_hit_tokens for t in self.turns)
+        tot = sum(t.prompt_tokens for t in self.turns)
+        if tot <= 0:
+            return 0.0
+        return hit / tot
+
     def summary(self) -> dict:
         tt = self.ttfps()
         rtfs = sorted(t.rtf for t in self.turns if t.rtf is not None)
@@ -137,4 +154,8 @@ class Metrics:
             "migration_off_path_s": self.migration_off_path_s,
             "migration_off_path": self.migration_off_path(),
             "replica_occupancy": list(self.replica_occupancy),
+            "prefix_hit_tokens": sum(t.prefix_hit_tokens
+                                     for t in self.turns),
+            "prefix_hit_frac": self.prefix_hit_frac(),
+            "pages_shared": self.pages_shared,
         }

@@ -244,6 +244,9 @@ class PagedSession:
     ended: bool = False             # user hung up; pages released
     history: List[List[int]] = field(default_factory=list)
     turn_stats: List[dict] = field(default_factory=list)
+    # the committed token-id history (len == kv_len): the radix prefix
+    # cache keys on it, and it migrates with the session
+    token_ids: List[int] = field(default_factory=list)
 
 
 class PagedRealtimeEngine:
@@ -256,7 +259,8 @@ class PagedRealtimeEngine:
                  async_transfers: bool = True,
                  chunk_pages: Optional[int] = None,
                  transfer_chunks_per_round: int = 1,
-                 fused_step: bool = True):
+                 fused_step: bool = True,
+                 prefix_cache: bool = False):
         assert cfg.family in ("dense", "moe", "vlm") and cfg.mla is None \
             and cfg.sliding_window is None, \
             "paged engine serves global-attention KV families"
@@ -342,11 +346,25 @@ class PagedRealtimeEngine:
         self.fused_step = fused_step
         self._fused_fn = _jitted_step(cfg, interpret, self.layout,
                                       fused=True) if fused_step else None
+        # shared-prefix KV subsystem (DESIGN.md §13): a radix index over
+        # committed pages + refcounted attach/COW in the pool.
+        # prefix_cache=False keeps today's private-pages behavior as the
+        # bit-exact differential twin (the async_transfers=False /
+        # fused_step=False pattern).
+        self.prefix_cache = None
+        if prefix_cache:
+            from repro.kvcache.prefix_cache import PrefixCache
+            self.prefix_cache = PrefixCache(page_size)
+            self.kv.set_cache_hooks(reclaim=self._reclaim_cached,
+                                    reclaimable=self._cached_reclaimable)
+        self._pending_hit: Dict[str, int] = {}
         # telemetry
         self.reload_wall_s: List[float] = []   # measured host->device time
         self.offload_events: List[tuple] = []
         self.pressure_holds = 0                # feeds held mid-round
         self.fused_launches = 0                # fused-plane step launches
+        self.peak_shared_pages = 0             # max pages with refcount>1
+        self.cow_copies = 0                    # copy-on-write page copies
 
     # ------------------------------------------------------------ pages
     def _place_pages(self) -> None:
@@ -391,6 +409,13 @@ class PagedRealtimeEngine:
             assert dropped == len(cancel_lis), (sid, cancel_lis)
             self.pool.cancel_loading(sid, cancel_lis)
         if offload_lis:
+            if self.prefix_cache is not None:
+                # about to leave HBM: forget these pages (and their
+                # unreachable subtrees) in the radix index first — the
+                # never-offload-shared rule is then an assert, not a
+                # hope (rc>1 pages were excluded by evictable_suffix)
+                seq = self.pool.seq(sid)
+                self._forget_cached([seq.pages[li] for li in offload_lis])
             self.pool.mark_offloading(sid, offload_lis)
             self.transfer.submit_offload(sid, offload_lis)
             if not self.async_transfers:
@@ -494,6 +519,157 @@ class PagedRealtimeEngine:
         self.transfer.drain_offloads_until(
             self.clock.now(), lambda: self.pool.free_pages >= need)
 
+    # ---------------------------------------------------- shared prefix
+    # (DESIGN.md §13.) The radix cache holds NON-refcount references:
+    # registering marks pages `cache_held` in the pool without touching
+    # refcounts, so `sum(refcounts) == live block-table references`
+    # stays the conservation invariant. Charging: every allocated page
+    # bills exactly one accountant — its owner session (kv.hbm_blocks)
+    # or, once the owner released/COW'd it away, the prefix cache
+    # (kv.cached_blocks, pool.page_owner[p] is None).
+
+    def _refresh_shared_pins(self) -> None:
+        """Recompute every session's shared-pinned block count (own
+        resident pages some other session references — never
+        offloadable) after any refcount 1<->2+ transition. Sessions per
+        engine are few; recomputing all of them keeps every call site
+        trivially correct."""
+        if self.prefix_cache is None:
+            return
+        for sid, kvs in self.kv.sessions.items():
+            kvs.shared_pinned_blocks = self.pool.shared_charged_pages(sid)
+        self.peak_shared_pages = max(self.peak_shared_pages,
+                                     self.pool.shared_pages())
+
+    def _attach_prefix(self, sess: PagedSession,
+                       prompt: np.ndarray) -> np.ndarray:
+        """Session birth: walk the radix index for the prompt's longest
+        cached prefix and attach to it — the block table points at the
+        shared pages, kv_len skips ahead, and prefill starts at the
+        first uncached token (the fused kernel's per-row q_start
+        renders from any offset; no kernel math changes). Returns the
+        remaining (uncached) prompt."""
+        if self.prefix_cache is None or sess.kv_len > 0:
+            return prompt
+        sid = sess.session_id
+        matched, phys = self.prefix_cache.lookup(prompt)
+        # the last prompt token always prefills: its logits are the
+        # turn's first output token
+        matched = min(matched, int(prompt.shape[0]) - 1)
+        if matched <= 0:
+            return prompt
+        n_phys = self.pool.pages_for(matched)
+        self.pool.attach_prefix(sid, phys[:n_phys], matched)
+        sess.kv_len = matched
+        sess.token_ids = [int(t) for t in prompt[:matched]]
+        kvs = self.kv.session(sid)
+        kvs.total_blocks = n_phys
+        kvs.shared_blocks = n_phys      # charged to owners / the cache
+        kvs.hbm_blocks = 0
+        self._pending_hit[sid] = matched
+        self.prefix_cache.hits += 1
+        self.prefix_cache.hit_tokens += matched
+        self._refresh_shared_pins()
+        self._sync_page_counts(sid)
+        return prompt[matched:]
+
+    def _ensure_writable(self, sid: str) -> None:
+        """Copy-on-write before a write lands: the next token's target
+        page may be shared (an attached partial tail, or this session's
+        own committed tail another session attached to). Allocate a
+        private copy, repoint, copy the bytes. Only the FIRST page of a
+        write region can be shared — everything past it is freshly
+        allocated. Raises OutOfPages recoverably (same contract as
+        _grow)."""
+        if self.prefix_cache is None:
+            return
+        sess = self.sessions[sid]
+        s = self.pool.seqs.get(sid)
+        if s is None:
+            return
+        li = sess.kv_len // self.page_size
+        if li >= len(s.pages):
+            return
+        phys = s.pages[li]
+        if phys < 0 or self.pool.refcount[phys] <= 1:
+            return
+        now = self.clock.now()
+        if not self.kv.try_allocate_working(1, now):
+            raise OutOfPages(f"{sid}: no page free for copy-on-write")
+        self._demand_free_pages(1)
+        old, new, was_owner = self.pool.cow(sid, li)
+        self.kv.release_working(1)
+        kvs = self.kv.session(sid)
+        if was_owner:
+            # the old page stays for its sharers, now charged to the
+            # cache; our new private copy replaces it 1:1 in hbm
+            self.kv.cached_blocks += 1
+        else:
+            # an attached page became a private one
+            kvs.shared_blocks -= 1
+            kvs.hbm_blocks += 1
+        self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
+        self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
+        self._place_pages()
+        self.cow_copies += 1
+        self._refresh_shared_pins()
+
+    def _register_prefix(self, sid: str) -> None:
+        """Turn close: index the session's committed chain — full pages
+        as interior radix nodes, the partially-filled tail as this
+        node's partial child. Newly indexed pages become `cache_held`
+        (kept allocated even at refcount 0 until forgotten/reclaimed);
+        charging is unchanged — this session still owns them."""
+        sess = self.sessions[sid]
+        s = self.pool.seqs.get(sid)
+        if s is None or sess.kv_len <= 0:
+            return
+        assert len(sess.token_ids) == sess.kv_len, \
+            f"{sid}: token history {len(sess.token_ids)} != " \
+            f"kv_len {sess.kv_len}"
+        now = self.clock.now()
+        newly = self.prefix_cache.register(
+            sess.token_ids, s.pages,
+            est=self.kv.next_use_estimate(sid, now),
+            protect=self.kv.session(sid).protected_until)
+        self.pool.cache_held.update(newly)
+
+    def _forget_cached(self, phys: List[int]) -> None:
+        """Drop pages (and their now-unreachable radix subtrees) from
+        the index before they offload/migrate; orphans whose last
+        reference was the index free immediately."""
+        dropped = self.prefix_cache.forget_phys(phys)
+        self.kv.cached_blocks -= self.pool.cache_release(dropped)
+
+    def _reclaim_cached(self, n: int, now: float) -> int:
+        """KVManager cache hook: free up to n orphaned cached pages
+        (leaves-first, farthest banked next-use first). Returns blocks
+        freed; the manager adjusts cached_blocks."""
+        phys = self.prefix_cache.reclaim(n, now, self.pool.refcount)
+        freed = self.pool.cache_release(phys)
+        assert freed == len(phys), (phys, freed)
+        return freed
+
+    def _cached_reclaimable(self, now: float) -> int:
+        return self.prefix_cache.reclaimable(now, self.pool.refcount)
+
+    def _bank_detach(self, sid: str, now: float) -> None:
+        """A sharer is leaving (hangup or migration): bank its Eq.4
+        next-use estimate and protection TTL on every indexed/shared
+        page it references — reclaim order for the eventual orphans is
+        min-over-sharers next-use (last detacher wins) with protection
+        extended to the max over sharers' TTLs."""
+        s = self.pool.seqs.get(sid)
+        if s is None:
+            return
+        held = [p for p in s.pages
+                if p >= 0 and (p in self.pool.cache_held
+                               or self.pool.refcount[p] > 1)]
+        if held:
+            self.prefix_cache.on_detach(
+                held, est=self.kv.next_use_estimate(sid, now),
+                protect=self.kv.session(sid).protected_until)
+
     def _grow(self, sid: str, token_capacity: int, *,
               best_effort: bool = False) -> bool:
         """Own enough pages for token_capacity tokens; KVManager evicts
@@ -534,8 +710,8 @@ class PagedRealtimeEngine:
         """Turn 0, synchronous path: prefill the prompt into pool pages
         before returning; returns slot id."""
         sess = self._prep_first_turn(session_id)
-        return self._begin_turn(sess, np.asarray(prompt, np.int32),
-                                max_new_tokens, first=True)
+        prompt = self._attach_prefix(sess, np.asarray(prompt, np.int32))
+        return self._begin_turn(sess, prompt, max_new_tokens, first=True)
 
     def start_turn(self, session_id: str, prompt: np.ndarray,
                    max_new_tokens: int) -> int:
@@ -563,6 +739,7 @@ class PagedRealtimeEngine:
         prompt = np.asarray(prompt, np.int32)
         if session_id not in self.sessions:
             sess = self._prep_first_turn(session_id)
+            prompt = self._attach_prefix(sess, prompt)
         else:
             sess = self._prep_next_turn(session_id)
         if request is not None:
@@ -660,6 +837,7 @@ class PagedRealtimeEngine:
             req.max_new_tokens = max_new_tokens
         req.reload_stall_s = sess.reload_stall_s
         req.reload_off_path_s = sess.reload_off_path_s
+        req.prefix_hit_tokens = self._pending_hit.pop(sid, 0)
         sess.turn_stats.append({
             "turn": sess.turn_index,
             "context_tokens": req.context_len,
@@ -668,6 +846,7 @@ class PagedRealtimeEngine:
             "reload_stall_s": sess.reload_stall_s,
             "reload_off_path_s": sess.reload_off_path_s,
             "re_prefill_tokens": re_prefill,
+            "prefix_hit_tokens": req.prefix_hit_tokens,
             "generated": 0,
             "aborted": False,
         })
@@ -680,11 +859,14 @@ class PagedRealtimeEngine:
         assert slot is not None, "no free decode slot"
         req = self._make_request(sess, prompt, max_new_tokens)
         self._grow(sid, sess.kv_len + req.prompt_len)
+        self._ensure_writable(sid)
         if self.fused_step:
             # turn 0 (the former dense-prefill graft) and turn-N
             # extension share the one fused path (DESIGN.md §11)
             tok = self._prefill_fused(slot, sess, prompt)
-        elif first:
+        elif first and sess.kv_len == 0:
+            # the dense graft writes whole pages from position 0 — only
+            # valid when nothing (no attached prefix) precedes it
             tok = self._prefill_dense(sess, prompt)
         else:
             tok = self._prefill_paged(slot, sess, prompt)
@@ -714,6 +896,7 @@ class PagedRealtimeEngine:
         self.v_pages = self.v_pages.at[:, phys].set(vl)
         self._place_pages()
         sess.kv_len = P
+        sess.token_ids = [int(t) for t in prompt]
         self.clock.tick()
         return int(jnp.argmax(logits[0]))
 
@@ -727,6 +910,7 @@ class PagedRealtimeEngine:
             {slot: (sess.session_id,
                     np.asarray(prompt, np.int32))})[slot]
         sess.kv_len += int(prompt.shape[0])
+        sess.token_ids += [int(t) for t in prompt]
         self.clock.tick()
         return int(np.argmax(logits))
 
@@ -745,6 +929,7 @@ class PagedRealtimeEngine:
         for t in prompt:
             logits = self._run_rows({slot: (sess.session_id, int(t))})[slot]
             sess.kv_len += 1
+            sess.token_ids.append(int(t))
             self.clock.tick()
         return int(np.argmax(logits))
 
@@ -778,8 +963,18 @@ class PagedRealtimeEngine:
         # hangup mid-transfer leaks nothing
         self.transfer.cancel_session(session_id)
         self.preloader.forget_session(session_id)
-        self.pool.release(session_id)
+        if self.prefix_cache is not None:
+            self._bank_detach(session_id, self.clock.now())
+        rep = self.pool.release(session_id)
+        if self.prefix_cache is not None:
+            # own pages surviving via sharers/the index re-charge to
+            # the cache; cache-charged pages whose last reference died
+            # here freed with the release
+            self.kv.cached_blocks += rep["orphaned"]
+            self.kv.cached_blocks -= rep["freed_orphan"]
         self.kv.release_session(session_id)
+        if self.prefix_cache is not None:
+            self._refresh_shared_pins()
         self.sessions[session_id].ended = True
         self.monitor.on_page_movement(session_id, resident=0, offloaded=0)
 
@@ -821,9 +1016,46 @@ class PagedRealtimeEngine:
         self.preloader.cancel(sid, now)
         self.kv.cancel_reload(sid, now)
         s = self.pool.seq(sid)
+        kvs = self.kv.session(sid)
+        deep_copied = 0
+        if self.prefix_cache is not None:
+            # Shared pages cannot ride the copy-then-free ledger (their
+            # slot must NOT free — sharers still need it hot). Private
+            # pages the index holds are forgotten (plain again); truly
+            # shared pages deep-copy to host synchronously and the
+            # departing session drops its reference — the destination
+            # re-resolves against its own radix index on later turns.
+            self._forget_cached(
+                [p for p in s.pages
+                 if p >= 0 and self.pool.refcount[p] == 1
+                 and p in self.pool.cache_held
+                 and self.pool.page_owner[p] == sid])
+            shared_lis = [li for li, p in enumerate(s.pages)
+                          if p >= 0 and (self.pool.refcount[p] > 1
+                                         or self.pool.page_owner[p] != sid)]
+            if shared_lis:
+                self._bank_detach(sid, now)
+                for li in shared_lis:
+                    phys = s.pages[li]
+                    hk = np.asarray(self.k_pages[:, phys])
+                    hv = np.asarray(self.v_pages[:, phys])
+                    was_owner, freed = self.pool.detach_page(sid, li)
+                    s.offloaded[li] = np.stack([hk, hv])
+                    if was_owner:
+                        # stays for its sharers, cache-charged now
+                        kvs.hbm_blocks -= 1
+                        self.kv.cached_blocks += 1
+                    else:
+                        kvs.shared_blocks -= 1
+                        if freed:
+                            # last reference to an orphan: the cache
+                            # was paying and the slot just freed
+                            self.kv.cached_blocks -= 1
+                deep_copied = len(shared_lis)
+                self._refresh_shared_pins()
+                self._sync_page_counts(sid)
         lis = [li for li, p in enumerate(s.pages)
                if p >= 0 and li not in s.loading and li not in s.offloading]
-        kvs = self.kv.session(sid)
         assert not s.loading and kvs.hbm_blocks == len(lis), \
             f"{sid}: accounting ({kvs.hbm_blocks}) disagrees with " \
             f"resident pages ({len(lis)}) at migrate-out"
@@ -835,7 +1067,7 @@ class PagedRealtimeEngine:
             # physical slots (and their usability) until chunks drain
             kvs.hbm_blocks = 0
             self._sync_page_counts(sid)
-        return len(lis)
+        return len(lis) + deep_copied
 
     def migrate_out_pending(self, session_id: str) -> int:
         """Pages still queued on the source's offload ledger."""
@@ -995,6 +1227,7 @@ class PagedRealtimeEngine:
             sess = self.sessions[sid]
             try:
                 self._grow(sid, sess.kv_len + len(toks))
+                self._ensure_writable(sid)   # COW a shared write target
             except OutOfPages:
                 # allocation failure mid-round: admission accounted
                 # blocks that interaction events (speech protection, a
@@ -1029,6 +1262,7 @@ class PagedRealtimeEngine:
                 sess = self.sessions[sid]
                 n = len(toks)
                 sess.kv_len += n
+                sess.token_ids += [int(t) for t in toks]
                 r = s.request
                 tok = int(np.argmax(out[i]))
                 if r.phase == Phase.PREFILL:
@@ -1093,6 +1327,7 @@ class PagedRealtimeEngine:
                 sess = self.sessions[s.session_id]
                 try:
                     self._grow(s.session_id, sess.kv_len + 1)
+                    self._ensure_writable(s.session_id)
                 except OutOfPages:
                     # mid-chunk allocation failure: admission accounted
                     # blocks that interaction events (speech protection,
@@ -1125,6 +1360,7 @@ class PagedRealtimeEngine:
                 s = self.slot_state[i]
                 sess = self.sessions[s.session_id]
                 sess.kv_len += 1
+                sess.token_ids.append(int(feeds[i][1]))
                 r = s.request
                 tok = int(np.argmax(out[i]))
                 if r.phase == Phase.PREFILL:
@@ -1207,6 +1443,8 @@ class PagedRealtimeEngine:
         grown = len(self.pool.seq(sid).pages) - sess.base_pages
         self.kv.release_working(grown + trimmed)
         self.kv.commit_turn(sid, sess.kv_len, now)
+        if self.prefix_cache is not None:
+            self._register_prefix(sid)
         if not aborted:
             self.monitor.on_response_complete(sid)
         sess.history.append(list(s.tokens))
@@ -1236,17 +1474,46 @@ class PagedRealtimeEngine:
     # ------------------------------------------------------------ checks
     def check_invariants(self) -> None:
         """Pool/accounting consistency (exercised by tests)."""
-        owned = [p for s in self.pool.seqs.values() for p in s.pages
-                 if p >= 0]
-        assert len(owned) == len(set(owned)), "double-owned page"
-        assert len(owned) + self.pool.free_pages == self.num_pages
+        from collections import Counter
+        # refcount conservation (the §13 property): every allocated
+        # page's refcount equals its live block-table references, and
+        # zero-ref pages are exactly the orphans the radix index holds
+        refs = Counter(p for s in self.pool.seqs.values()
+                       for p in s.pages if p >= 0)
+        for p, c in self.pool.refcount.items():
+            assert refs.get(p, 0) == c, \
+                f"page {p}: refcount {c} != {refs.get(p, 0)} references"
+            if c == 0:
+                assert p in self.pool.cache_held, \
+                    f"page {p}: zero refs and not cache-held — leaked"
+        allocated = set(self.pool.refcount)
+        assert set(refs).issubset(allocated)
+        assert allocated.isdisjoint(self.pool.free), "free+allocated page"
+        assert len(allocated) + self.pool.free_pages == self.num_pages
+        assert self.pool.cache_held.issubset(allocated)
+        if self.prefix_cache is not None:
+            assert set(self.prefix_cache.by_phys) == self.pool.cache_held
+            assert self.kv.cached_blocks == sum(
+                1 for p in allocated
+                if self.pool.page_owner[p] is None), \
+                f"cached_blocks {self.kv.cached_blocks} != owner-less pages"
+            for sid in self.pool.seqs:
+                kvs = self.kv.sessions.get(sid)
+                if kvs is not None:
+                    assert kvs.shared_pinned_blocks == \
+                        self.pool.shared_charged_pages(sid), \
+                        f"{sid}: stale shared-pin count"
+        else:
+            assert self.kv.cached_blocks == 0 \
+                and not self.pool.cache_held \
+                and all(c == 1 for c in self.pool.refcount.values())
         # copy-then-free: an offloading page is accounting-evicted but
         # physically still owned until its chunk drains
         offloading = sum(len(s.offloading)
                          for s in self.pool.seqs.values())
-        assert self.kv.used_blocks == len(owned) - offloading, \
+        assert self.kv.used_blocks == len(allocated) - offloading, \
             f"accounting {self.kv.used_blocks} != physical " \
-            f"{len(owned)} - offloading {offloading}"
+            f"{len(allocated)} - offloading {offloading}"
         # per-session page-state conservation (the ISSUE 4 property):
         # resident + in-flight + offloaded == committed, disjointly
         for sid, s in self.pool.seqs.items():

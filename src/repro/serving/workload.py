@@ -37,6 +37,13 @@ class WorkloadConfig:
     burst_factor: float = 4.0        # peak/mean rate for burstgpt
     burst_period_s: float = 20.0
     audio_per_token_s: float = 0.08
+    # shared-system-prompt families: sessions are assigned round-robin
+    # to K families; sessions in the same family open their first turn
+    # with an identical ``family_prefix_len``-token seeded prefix
+    # (drawn by ``family_prefix``), so the prefix cache can attach
+    # later arrivals to the first session's committed pages. 0 = off.
+    prompt_families: int = 0
+    family_prefix_len: int = 0
 
 
 def _lognormal(rng, mean, sigma, lo, hi):
@@ -100,7 +107,19 @@ def generate(cfg: WorkloadConfig) -> List[Session]:
     for i, t0 in enumerate(arrivals):
         turns = _make_turns(rng, cfg, cfg.kind)
         think = _lognormal(rng, 2.0, 0.5, 0.5, 8.0)
+        family = i % cfg.prompt_families if cfg.prompt_families > 0 else -1
         sessions.append(Session(
             session_id=f"s{i:04d}", turns=turns, arrival_time=t0,
-            think_time_s=think))
+            think_time_s=think, family=family))
     return sessions
+
+
+def family_prefix(cfg: WorkloadConfig, family: int, vocab: int,
+                  seed: int) -> np.ndarray:
+    """The shared system-prompt tokens for one family: a seeded draw
+    keyed on (seed, family) only, so every session in the family — and
+    every engine/gateway replaying the same workload — prepends the
+    exact same tokens to its first-turn prompt."""
+    rng = np.random.default_rng([seed, 1_000_003 + family])
+    return rng.integers(0, vocab,
+                        size=cfg.family_prefix_len).astype(np.int32)

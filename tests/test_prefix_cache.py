@@ -1,0 +1,524 @@
+"""Shared-prefix KV subsystem tests (ISSUE 7, DESIGN.md §13).
+
+Three layers:
+
+- **pool** — refcounted attach / copy-on-write / detach / release
+  bookkeeping on ``PagedPool``, including the hard guarantees that a
+  shared (refcount>1) page is never offloadable and the release report
+  classifies orphans exactly;
+- **radix** — ``PrefixCache`` lookup/register/forget/reclaim semantics:
+  longest-prefix match across sessions' chains, partial-tail promotion,
+  subtree forget on offload, and farthest-banked-next-use reclaim order
+  (min-over-sharers Eq. 4 once every sharer detached);
+- **engine** — the differential contract: with ``p_barge_in=0`` the
+  ``prefix_cache=True`` engine is *bit-exact* in token values and
+  client-visible event streams against the ``prefix_cache=False`` twin
+  on full multi-turn replay traces (sharing changes timing, never
+  content), refcount conservation (``sum(refcounts) == live block-table
+  references``) holds after every round even under barge storms, the
+  eviction-victim choice still agrees with a fresh Eq. 4 oracle (shared
+  pinned pages excluded from the evictable budget), and a fixed pool
+  holds strictly more resident sessions when one prompt family shares
+  its prefix.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+try:                                   # deterministic fallback below
+    import hypothesis                  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ImportError:                    # pragma: no cover
+    HAS_HYPOTHESIS = False
+from test_differential import install_eviction_oracle
+
+from repro.configs import get_config, reduced
+from repro.kvcache.paged import OutOfPages, PagedPool
+from repro.kvcache.prefix_cache import PrefixCache
+from repro.models import init_params
+from repro.serving.gateway.replay import (ReplayClock, ReplayConfig,
+                                          ReplayGateway, run_replay)
+from repro.serving.paged_engine import PagedRealtimeEngine
+from repro.serving.workload import WorkloadConfig
+
+NDEV = len(jax.devices())
+multidev = pytest.mark.skipif(
+    NDEV < 2,
+    reason="needs >1 device; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                  vocab=331)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ======================================================================
+# pool: refcounted attach / COW / detach
+# ======================================================================
+def test_attach_refcounts_and_release_report():
+    pool = PagedPool(num_pages=8, page_size=4)
+    pool.ensure_capacity("a", 8)                 # 2 private pages
+    pages = list(pool.seq("a").pages)
+    pool.attach_prefix("b", pages, 8)
+    assert pool.seq("b").pages == pages and pool.seq("b").length == 8
+    assert all(pool.refcount[p] == 2 for p in pages)
+    assert pool.free_pages == 6                  # no new pages allocated
+    # owner hangs up first: its pages orphan (charged to the cache side)
+    rep = pool.release("a")
+    assert rep == {"freed_own": 0, "freed_orphan": 0, "orphaned": 2}
+    assert all(pool.refcount[p] == 1 for p in pages)
+    assert all(pool.page_owner[p] is None for p in pages)
+    # last sharer detaches; nothing holds the pages -> freed as orphans
+    rep = pool.release("b")
+    assert rep == {"freed_own": 0, "freed_orphan": 2, "orphaned": 0}
+    assert pool.free_pages == 8 and not pool.refcount
+
+
+def test_cache_held_pages_survive_release():
+    pool = PagedPool(num_pages=8, page_size=4)
+    pool.ensure_capacity("a", 8)
+    pages = list(pool.seq("a").pages)
+    pool.cache_held.update(pages)                # radix index holds them
+    rep = pool.release("a")
+    assert rep == {"freed_own": 0, "freed_orphan": 0, "orphaned": 2}
+    # refcount 0 but still allocated: the index keeps them reclaimable
+    assert all(pool.refcount[p] == 0 for p in pages)
+    assert pool.free_pages == 6
+    assert pool.cache_release(pages) == 2
+    assert pool.free_pages == 8
+
+
+def test_cow_reassigns_ownership():
+    pool = PagedPool(num_pages=8, page_size=4)
+    pool.ensure_capacity("a", 6)                 # page 1 partially filled
+    pages = list(pool.seq("a").pages)
+    pool.attach_prefix("b", pages, 6)
+    # the attacher writes into the shared tail page -> COW
+    old, new, was_owner = pool.cow("b", 1)
+    assert old == pages[1] and new not in pages and not was_owner
+    assert pool.refcount[old] == 1 and pool.refcount[new] == 1
+    assert pool.page_owner[new] == "b" and pool.page_owner[old] == "a"
+    assert pool.seq("b").pages[1] == new
+    # the owner writing its own shared page also COWs, orphaning it
+    pool.attach_prefix("c", pages[:1] + [new], 6)
+    old2, new2, was_owner2 = pool.cow("a", 0)
+    assert was_owner2 and pool.page_owner[old2] is None
+    assert pool.page_owner[new2] == "a"
+
+
+def test_shared_pages_never_offloadable():
+    pool = PagedPool(num_pages=8, page_size=4)
+    pool.ensure_capacity("a", 12)                # 3 pages
+    pages = list(pool.seq("a").pages)
+    pool.attach_prefix("b", pages[:2], 8)
+    # suffix walk stops at the shared boundary: only the private page
+    assert pool.evictable_suffix("a", 3) == ([], [2])
+    with pytest.raises(AssertionError):
+        pool.mark_offloading("a", [0])           # refcount 2
+    pool.cache_held.add(pages[2])
+    with pytest.raises(AssertionError):
+        pool.mark_offloading("a", [2])           # indexed in the radix
+    pool.cache_held.discard(pages[2])
+    pool.mark_offloading("a", [2])               # private again: fine
+
+
+def test_attacher_cannot_offload_orphaned_prefix():
+    pool = PagedPool(num_pages=8, page_size=4)
+    pool.ensure_capacity("a", 8)
+    pages = list(pool.seq("a").pages)
+    pool.attach_prefix("b", pages, 8)
+    pool.release("a")                            # orphan: rc 1, owner None
+    # the attacher's evictable suffix excludes pages it does not own
+    # (they are charged to the cache, and it has no host copy of them)
+    assert pool.evictable_suffix("b", 2) == ([], [])
+
+
+def test_conservation_under_random_pool_ops():
+    rng = np.random.default_rng(7)
+    pool = PagedPool(num_pages=24, page_size=4)
+    lengths = {}
+    for step in range(300):
+        sid = f"s{rng.integers(0, 6)}"
+        op = rng.random()
+        try:
+            if sid not in lengths:
+                donors = [d for d in lengths if lengths[d] >= 4]
+                if op < 0.5 and donors:
+                    d = donors[int(rng.integers(0, len(donors)))]
+                    n_phys = int(rng.integers(1, lengths[d] // 4 + 1))
+                    phys = pool.seq(d).pages[:n_phys]
+                    pool.attach_prefix(sid, phys, n_phys * 4)
+                    lengths[sid] = n_phys * 4
+                else:
+                    n = int(rng.integers(1, 9))
+                    pool.ensure_capacity(sid, n)
+                    lengths[sid] = n
+            elif op < 0.5:
+                lengths[sid] += int(rng.integers(1, 6))
+                pool.ensure_capacity(sid, lengths[sid])
+                li = (lengths[sid] - 1) // 4
+                p = pool.seq(sid).pages[li]
+                if pool.refcount[p] > 1:
+                    pool.cow(sid, li)
+            elif op < 0.8:
+                pool.release(sid)
+                del lengths[sid]
+        except OutOfPages:
+            if lengths:
+                victim = sorted(lengths)[0]
+                pool.release(victim)
+                del lengths[victim]
+        # the conservation invariant, every step
+        from collections import Counter
+        refs = Counter(p for sid2 in lengths
+                       for p in pool.seq(sid2).pages if p >= 0)
+        assert dict(refs) == {p: c for p, c in pool.refcount.items()
+                              if c > 0}
+        assert all(c >= 0 for c in pool.refcount.values())
+        assert len(pool.refcount) + pool.free_pages == pool.num_pages
+
+
+# ======================================================================
+# radix index
+# ======================================================================
+def test_radix_lookup_register_roundtrip():
+    c = PrefixCache(page_size=4)
+    toks = list(range(10))
+    newly = c.register(toks, [3, 7, 9])
+    assert newly == [3, 7, 9] and len(c) == 3
+    m, phys = c.lookup(toks)
+    assert m == 10 and phys == [3, 7, 9]
+    # partial match inside the tail page
+    m, phys = c.lookup(toks[:9] + [99])
+    assert m == 9 and phys == [3, 7, 9]
+    # diverging in page 1: only page 0 matches
+    m, phys = c.lookup([0, 1, 2, 3, 99, 5])
+    assert m == 4 and phys == [3]
+    m, phys = c.lookup([50, 51])
+    assert m == 0 and phys == []
+
+
+def test_radix_cross_session_chain():
+    """A deeper chain registered by another session extends the match:
+    KV for the same token prefix is bit-identical (PR 5), so lookups
+    may mix pages from different registering sessions."""
+    c = PrefixCache(page_size=4)
+    c.register(list(range(4)), [1])
+    newly = c.register(list(range(8)), [2, 5])   # page 0 already indexed
+    assert newly == [5]                          # existing node wins
+    m, phys = c.lookup(list(range(8)))
+    assert m == 8 and phys == [1, 5]
+
+
+def test_radix_partial_promotes_when_page_fills():
+    c = PrefixCache(page_size=4)
+    c.register([0, 1, 2, 3, 4, 5], [8, 9])       # page 9 partial (2 toks)
+    m, phys = c.lookup([0, 1, 2, 3, 4, 5, 6])
+    assert m == 6 and phys == [8, 9]
+    # same physical page committed further -> the partial extends
+    c.register([0, 1, 2, 3, 4, 5, 6], [8, 9])
+    assert c.lookup([0, 1, 2, 3, 4, 5, 6, 7])[0] == 7
+    # and promotes to a full node when it fills (the re-index reports
+    # the page as newly held again; the caller's set-update is
+    # idempotent)
+    newly = c.register([0, 1, 2, 3, 4, 5, 6, 7], [8, 9])
+    assert newly == [9]
+    root_kids = c.root.children
+    node = root_kids[(0, 1, 2, 3)]
+    assert node.partial is None and (4, 5, 6, 7) in node.children
+    assert c.lookup(list(range(8)))[0] == 8
+
+
+def test_radix_forget_drops_subtree():
+    c = PrefixCache(page_size=2)
+    c.register([0, 1, 2, 3, 4, 5], [10, 11, 12])
+    dropped = c.forget_phys([11])                # interior node
+    assert sorted(dropped) == [11, 12]           # subtree goes with it
+    assert c.lookup([0, 1, 2, 3])[0] == 2        # page 0 still indexed
+    assert len(c) == 1
+
+
+def test_radix_reclaim_order_and_protection():
+    c = PrefixCache(page_size=2)
+    c.register([0, 1, 2, 3], [5, 6])
+    c.register([8, 9], [7])
+    rc = {5: 1, 6: 0, 7: 0}                      # page 5 still attached
+    c.on_detach([6], est=100.0, protect=-1.0)
+    c.on_detach([7], est=50.0, protect=-1.0)
+    # farthest banked next-use first; a referenced page never reclaims
+    assert c.reclaim(3, now=0.0, refcount=rc) == [6, 7]
+    assert len(c) == 1
+    c2 = PrefixCache(page_size=2)
+    c2.register([0, 1], [3])
+    c2.on_detach([3], est=10.0, protect=5.0)
+    assert c2.reclaim(1, now=4.0, refcount={3: 0}) == []   # protected
+    assert c2.reclaimable(4.0, {3: 0}) == 0
+    assert c2.reclaimable(6.0, {3: 0}) == 1
+    assert c2.reclaim(1, now=6.0, refcount={3: 0}) == [3]
+
+
+def test_radix_reclaimable_counts_whole_free_subtrees():
+    c = PrefixCache(page_size=2)
+    c.register([0, 1, 2, 3], [5, 6])
+    # leaf free, root of the chain still referenced: only the leaf
+    assert c.reclaimable(0.0, {5: 2, 6: 0}) == 1
+    assert c.reclaimable(0.0, {5: 0, 6: 0}) == 2
+
+
+# ======================================================================
+# engine: differential bit-exactness + conservation + capacity
+# ======================================================================
+class _Recording(ReplayGateway):
+    """Captures the client-visible event stream (token values, turn
+    completions) in dispatch order for stream-exactness assertions.
+    Internal prefill-progress events are excluded: skipping prefill of
+    cached tokens is exactly what the subsystem does, so the cached
+    plane emits fewer of them by design — what the client hears must
+    still be identical."""
+
+    def __init__(self, *a, **k):
+        self.stream = []
+        super().__init__(*a, **k)
+
+    def _dispatch(self, events, sids):
+        for slot in sorted(events):
+            for kind, val in events[slot]:
+                if kind in ("token", "finished"):
+                    self.stream.append((sids[slot], kind, int(val)))
+        super()._dispatch(events, sids)
+
+    def per_session(self):
+        """Per-session ordered event streams: cross-session
+        interleaving is scheduling timing (skip-ahead finishes a
+        cached prefill in fewer rounds), what each client receives is
+        the contract."""
+        out = {}
+        for sid, kind, val in self.stream:
+            out.setdefault(sid, []).append((kind, val))
+        return out
+
+
+def _replay(tiny_model, wl, seed, *, prefix, num_pages=64, mesh=None,
+            slots=4, pages_per_seq=12, record=False, scan=False,
+            rcfg=None):
+    cfg, params = tiny_model
+    clock = ReplayClock()
+    eng = PagedRealtimeEngine(cfg, params, slots=slots, page_size=8,
+                              pages_per_seq=pages_per_seq,
+                              num_pages=num_pages, clock=clock,
+                              mesh=mesh, fused_step=True,
+                              prefix_cache=prefix)
+    if scan:
+        eng.kv.index_mode = "scan"
+    cls = _Recording if record else ReplayGateway
+    gw = cls(eng, wl, rcfg or ReplayConfig(max_turns=2, max_prompt=8),
+             seed=seed)
+    gw.run(check_every_round=eng.check_invariants)
+    return gw
+
+
+def _family_wl(seed, sessions=6, families=1, prefix_len=36, barge=0.0):
+    return WorkloadConfig(kind="interactive", num_sessions=sessions,
+                          seed=seed, p_barge_in=barge, arrival="poisson",
+                          rate_rps=4.0, prompt_families=families,
+                          family_prefix_len=prefix_len)
+
+
+def _assert_bit_exact(tiny_model, seed, **wl_kw):
+    wl = _family_wl(seed, **wl_kw)
+    cached = _replay(tiny_model, wl, seed, prefix=True, record=True)
+    control = _replay(tiny_model, wl, seed, prefix=False, record=True)
+    hist = {sid: s.history for sid, s in cached.eng.sessions.items()}
+    want = {sid: s.history for sid, s in control.eng.sessions.items()}
+    assert hist == want                      # per-turn token values
+    assert cached.per_session() == control.per_session()
+    return cached
+
+
+@pytest.mark.parametrize("seed", [0, 3, 5])
+def test_prefix_cache_bit_exact_vs_control(tiny, seed):
+    """Full multi-turn traces, one shared family, non-page-aligned
+    prefix (COW on the shared tail page), tight enough pool for
+    evict/reload churn: token values and event streams must be
+    identical with sharing on and off. Sharing may only change timing
+    and residency — with ``p_barge_in=0`` even timing-sensitive outputs
+    coincide."""
+    cached = _assert_bit_exact(tiny, seed)
+    s = cached.metrics.summary()
+    assert s["prefix_hit_tokens"] > 0        # sharing actually happened
+    assert cached.eng.peak_shared_pages > 0
+
+
+def test_prefix_cache_bit_exact_under_eviction(tiny):
+    """A pool sized to force evictions mid-trace: reloads of private
+    pages interleave with shared attaches, still bit-exact."""
+    wl = _family_wl(9, sessions=6, prefix_len=32)
+    cached = _replay(tiny, wl, 9, prefix=True, num_pages=28, record=True)
+    control = _replay(tiny, wl, 9, prefix=False, num_pages=28,
+                      record=True)
+    assert {s: e.history for s, e in cached.eng.sessions.items()} \
+        == {s: e.history for s, e in control.eng.sessions.items()}
+    assert cached.per_session() == control.per_session()
+
+
+@multidev
+@pytest.mark.parametrize("shape", [(1, 2), (1, 8)])
+def test_prefix_cache_bit_exact_on_mesh(tiny, shape):
+    """Sharing is placement-stable (distributed/paged.py): the sharded
+    engine with the prefix cache matches the unsharded control
+    bit-exactly — attach only repoints block tables at physical ids
+    every shard already serves."""
+    if shape[0] * shape[1] > NDEV:
+        pytest.skip(f"mesh {shape} > {NDEV} devices")
+    wl = _family_wl(4, sessions=4, prefix_len=20)
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    cached = _replay(tiny, wl, 4, prefix=True, mesh=mesh, record=True)
+    control = _replay(tiny, wl, 4, prefix=False, record=True)
+    assert {s: e.history for s, e in cached.eng.sessions.items()} \
+        == {s: e.history for s, e in control.eng.sessions.items()}
+    assert cached.per_session() == control.per_session()
+    assert cached.eng.peak_shared_pages > 0
+
+
+@pytest.mark.parametrize("seed,barge", [(1, 0.5), (6, 0.3), (11, 0.7)])
+def test_refcount_conservation_under_barge_storms(tiny, seed, barge):
+    """Barge-ins abort turns mid-prefill and mid-decode while sessions
+    attach/detach/COW/evict; ``check_invariants`` (which asserts
+    ``sum(refcounts) == live block-table references`` plus the full
+    charging partition) runs after every round. Timing diverges under
+    barges, so only conservation — not bit-exactness — is asserted."""
+    gw = _replay(tiny, _family_wl(seed, sessions=6, prefix_len=36,
+                                  barge=barge),
+                 seed, prefix=True, num_pages=40)
+    gw.eng.check_invariants()
+    assert gw.metrics.summary()["prefix_hit_tokens"] > 0
+
+
+def _conservation_property(tiny, seed, sessions, prefix_len, barge,
+                           pages):
+    """Random attach/detach/COW/evict/barge interleavings: conservation
+    after every round, and with barges off the token streams also match
+    the no-sharing control."""
+    wl = _family_wl(seed, sessions=sessions, prefix_len=prefix_len,
+                    barge=barge)
+    gw = _replay(tiny, wl, seed, prefix=True, num_pages=pages)
+    gw.eng.check_invariants()
+    if barge == 0.0:
+        control = _replay(tiny, wl, seed, prefix=False, num_pages=pages)
+        assert {s: e.history for s, e in gw.eng.sessions.items()} \
+            == {s: e.history for s, e in control.eng.sessions.items()}
+
+
+if HAS_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), sessions=st.integers(3, 7),
+           prefix_len=st.integers(8, 40),
+           barge=st.sampled_from([0.0, 0.3, 0.6]),
+           pages=st.sampled_from([32, 40, 64]))
+    def test_refcount_conservation_property(tiny, seed, sessions,
+                                            prefix_len, barge, pages):
+        _conservation_property(tiny, seed, sessions, prefix_len, barge,
+                               pages)
+else:
+    # hypothesis is optional (requirements-dev.txt); rather than skip,
+    # the property runs over a pinned corner-case grid so the soak is
+    # always-on in tier-1
+    @pytest.mark.slow
+    @pytest.mark.parametrize(
+        "seed,sessions,prefix_len,barge,pages",
+        [(0, 3, 8, 0.0, 32), (7, 5, 21, 0.3, 40),
+         (123, 7, 40, 0.6, 64)])
+    def test_refcount_conservation_property(tiny, seed, sessions,
+                                            prefix_len, barge, pages):
+        _conservation_property(tiny, seed, sessions, prefix_len, barge,
+                               pages)
+
+
+def test_eviction_oracle_with_shared_pages(tiny):
+    """Victim choice under sharing still agrees with a fresh Eq. 4
+    ranking: shared-pinned pages are excluded from every session's
+    evictable budget (they are not offloadable), and the remaining
+    ranking is the same min-next-use policy the differential harness
+    checks on the private plane."""
+    cfg, params = tiny
+    clock = ReplayClock()
+    eng = PagedRealtimeEngine(cfg, params, slots=4, page_size=8,
+                              pages_per_seq=12, num_pages=18,
+                              clock=clock, fused_step=True,
+                              prefix_cache=True)
+    eng.kv.index_mode = "scan"
+    violations = install_eviction_oracle(eng.kv)
+    wl = _family_wl(2, sessions=8, prefix_len=32)
+    gw = ReplayGateway(eng, wl, ReplayConfig(max_turns=2, max_prompt=8),
+                       seed=2)
+    gw.run(check_every_round=eng.check_invariants)
+    assert eng.offload_events, "pool never under pressure: test is vacuous"
+    assert violations == []
+
+
+def test_fixed_pool_holds_more_sessions_with_sharing(tiny):
+    """The acceptance criterion: >=8 sessions of one prompt family on a
+    fixed pool — the prefix-cache engine keeps strictly more sessions
+    fully resident (pinned hot) than the no-sharing control before
+    ``OutOfPages``."""
+    cfg, params = tiny
+    fam = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                            size=32).astype(np.int32)
+    suffix = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, size=(16, 4)).astype(np.int32)
+
+    def admit_until_full(prefix):
+        eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=8,
+                                  pages_per_seq=8, num_pages=16,
+                                  fused_step=True, prefix_cache=prefix)
+        resident = 0
+        for i in range(16):
+            sid = f"s{i}"
+            try:
+                eng.add_session(sid, np.concatenate([fam, suffix[i]]),
+                                max_new_tokens=2)
+            except OutOfPages:
+                break
+            eng.run_to_completion()
+            eng.kv.pin(sid)          # hold every finished session hot
+            eng.check_invariants()
+            resident += 1
+        return resident, eng
+
+    n_cached, eng_c = admit_until_full(True)
+    n_control, _ = admit_until_full(False)
+    assert n_cached >= 8
+    assert n_cached > n_control
+    assert eng_c.prefix_cache.hit_tokens > 0
+
+
+def test_migration_resolves_shared_pages(tiny):
+    """Fleet live-migration of sessions attached to shared pages:
+    draining replica 0 migrates its sessions mid-trace, so the source
+    deep-copies each attached prefix into the migration payload and the
+    destination rebuilds a private context; invariants (including
+    conservation and the charging partition) hold on both replicas
+    after every round."""
+    from repro.serving.fleet.replay import run_fleet_replay
+    cfg, params = tiny
+
+    def factory(clock):
+        return PagedRealtimeEngine(cfg, params, slots=2, page_size=8,
+                                   pages_per_seq=12, num_pages=48,
+                                   clock=clock, fused_step=True,
+                                   prefix_cache=True)
+
+    wl = _family_wl(3, sessions=6, families=1, prefix_len=24)
+    m, gw = run_fleet_replay(
+        factory, 2, wl, ReplayConfig(max_turns=2, max_prompt=8),
+        seed=3, drain_after_routes=(0, 6))
+    for e in gw.replicas:
+        e.check_invariants()
+    assert m.migrations > 0
+    assert any(e.peak_shared_pages > 0 for e in gw.replicas)
