@@ -63,27 +63,41 @@ def run(quick: bool = False) -> dict:
     # preload. The row reports the fraction of modeled reload seconds
     # the async chunked transfer engine kept off the turn critical
     # path (target >= 70%).
-    gw = build_gateway(policy="liveserve", scale=4.0, model=model,
-                       frontier_cap_s=3.0, round_token_budget=2,
-                       pages_per_seq=8, num_pages=12 if quick else 20,
-                       slots=4, audio_per_token_s=apt,
-                       preload_chunks=2)
-    # per-turn sizes bounded so three turns fit the 64-token context
-    # (pages_per_seq * page_size) with decode lookahead to spare
-    m, gw = run_gateway_workload(
-        policy="liveserve", sessions=3 if quick else 6, barge_in=0.2,
-        seed=1, rate_rps=2.0, max_turns=3, max_prompt=8,
-        max_response=8, gateway=gw, timeout_s=600)
-    s = m.summary()
-    ts = gw.engine.transfer.stats
-    out["overlap"] = s
-    row("gateway/reload_overlap_frac", s["reload_overlap_frac"] * 100.0,
-        f"off_pages={ts.reload_pages_off_path};"
-        f"on_pages={ts.reload_pages_on_path};"
-        f"cancelled={ts.reload_pages_cancelled};"
-        f"mean_stall_us={fmt(s['mean_reload_stall'] * 1e6, 1)};"
-        f"mean_off_us={fmt(s['mean_reload_off_path'] * 1e6, 1)};"
-        f"turns={s['turns']}")
+    # the same seeded workload runs once per KV wire format
+    # (DESIGN.md §14): the int8 tier must keep the overlap fraction at
+    # or above the fp32 run while its modeled reload wire bytes drop
+    # under 0.5x — the quantized acceptance rows.
+    for kv_quant in ("fp32", "int8"):
+        gw = build_gateway(policy="liveserve", scale=4.0, model=model,
+                           frontier_cap_s=3.0, round_token_budget=2,
+                           pages_per_seq=8,
+                           num_pages=12 if quick else 20,
+                           slots=4, audio_per_token_s=apt,
+                           preload_chunks=2, kv_quant=kv_quant)
+        # per-turn sizes bounded so three turns fit the 64-token
+        # context (pages_per_seq * page_size) with lookahead to spare
+        m, gw = run_gateway_workload(
+            policy="liveserve", sessions=3 if quick else 6,
+            barge_in=0.2, seed=1, rate_rps=2.0, max_turns=3,
+            max_prompt=8, max_response=8, gateway=gw, timeout_s=600)
+        s = m.summary()
+        ts = gw.engine.transfer.stats
+        suffix = "" if kv_quant == "fp32" else "_int8"
+        out[f"overlap{suffix}"] = s
+        row(f"gateway/reload_overlap_frac{suffix}",
+            s["reload_overlap_frac"] * 100.0,
+            f"off_pages={ts.reload_pages_off_path};"
+            f"on_pages={ts.reload_pages_on_path};"
+            f"cancelled={ts.reload_pages_cancelled};"
+            f"mean_stall_us={fmt(s['mean_reload_stall'] * 1e6, 1)};"
+            f"mean_off_us={fmt(s['mean_reload_off_path'] * 1e6, 1)};"
+            f"turns={s['turns']}")
+    i8 = gw.engine.transfer.stats                 # the int8 run's ledger
+    row("gateway/kv_wire_bytes_saved",
+        out["overlap_int8"]["kv_wire_bytes_saved"],
+        f"reload_wire_bytes={i8.reload_wire_bytes:.0f};"
+        f"int8_over_fp32={gw.engine.kv.channel.wire_scale:.3f};"
+        f"fp32_saved={out['overlap']['kv_wire_bytes_saved']:.0f}")
 
     # long-prompt TTFT (ISSUE 5): tail first-audio when every prompt is
     # an order of magnitude longer than an utterance transcript — the

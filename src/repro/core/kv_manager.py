@@ -64,16 +64,31 @@ class Transfer:
 
 
 class TransferChannel:
-    """Serialized DRAM<->HBM path (PCIe-style shared bandwidth)."""
+    """Serialized DRAM<->HBM path (PCIe-style shared bandwidth).
 
-    def __init__(self, gb_per_s: float, block_bytes: float):
+    ``wire_scale`` is the wire-format compression factor (DESIGN.md
+    §14): wire bytes per logical block byte, 1.0 for the fp32 control
+    and ~0.25 for int8 KV pages. It multiplies into ``transfer_time``
+    here — the single point every modeled cost flows through — so
+    chunk sizing, preload admission, turn-start stall settlement, and
+    fleet migration all price the compressed payload without knowing
+    the codec exists. ``block_bytes`` stays the *logical* size (pool
+    capacity math never compresses)."""
+
+    def __init__(self, gb_per_s: float, block_bytes: float,
+                 wire_scale: float = 1.0):
         self.gb_per_s = gb_per_s
         self.block_bytes = block_bytes
+        self.wire_scale = wire_scale
         self.busy_until = 0.0
         self.log: List[Transfer] = []
 
+    def wire_bytes(self, blocks: int) -> float:
+        """Bytes a transfer of ``blocks`` actually puts on the wire."""
+        return blocks * self.block_bytes * self.wire_scale
+
     def transfer_time(self, blocks: int) -> float:
-        return blocks * self.block_bytes / (self.gb_per_s * 1e9)
+        return self.wire_bytes(blocks) / (self.gb_per_s * 1e9)
 
     def submit(self, session_id: str, blocks: int, now: float,
                background: bool) -> Transfer:

@@ -20,12 +20,14 @@ chunked, round-interleaved jobs:
   across the rounds where the user is still speaking.
 - **Turn-start settlement.** ``finish_session`` completes whatever is
   still queued for a session when its next turn reaches the LLM stage.
-  Chunks already drained cost nothing; chunks whose channel-modeled
-  completion instant has passed are late-materialized for free (the
-  modeled DMA finished during the speech window — only our host-side
-  bookkeeping was lazy); the true remainder is charged on-path at its
-  chunk-serial channel cost. That split is the on-path vs off-path
-  reload accounting the shared metrics schema reports.
+  Chunks already drained cost the turn nothing — their full modeled
+  cost was banked off-path at drain time (the bytes physically landed
+  during a round, so the turn can never stall on them); chunks whose
+  channel-modeled completion instant has passed are late-materialized
+  for free (the modeled DMA finished during the speech window — only
+  our host-side bookkeeping was lazy); the true remainder is charged
+  on-path at its chunk-serial channel cost. That split is the on-path
+  vs off-path reload accounting the shared metrics schema reports.
 - **Copy-then-free offload.** An evicted page stays resident (usable,
   attendable) until its chunk is durably in the host store; only then
   is the physical slot freed. Allocation pressure *demands* completion
@@ -98,6 +100,13 @@ class TransferStats:
     demand_drains: int = 0           # offload chunks forced by allocation
     migration_pages_moved: int = 0   # MIGRATE-tagged pages that drained
     migration_pages_cancelled: int = 0   # MIGRATE-tagged zero-copy drops
+    # wire-format telemetry (DESIGN.md §14): modeled bytes completed
+    # chunks put on the channel, and the bytes the codec saved against
+    # the logical (uncompressed) payload. Cancelled chunks count in
+    # neither — their bytes never moved.
+    wire_bytes_moved: float = 0.0
+    wire_bytes_saved: float = 0.0
+    reload_wire_bytes: float = 0.0   # RELOAD-only share of wire_bytes_moved
 
     def overlap_fraction(self) -> float:
         """Off-path share of reloaded pages; 0.0 when nothing reloaded
@@ -204,14 +213,45 @@ class TransferEngine:
             self.stats.offload_pages_completed += chunk.pages
         if chunk.tag == MIGRATE:
             self.stats.migration_pages_moved += chunk.pages
+        ch = self.channel
+        wire = ch.wire_bytes(chunk.pages)
+        self.stats.wire_bytes_moved += wire
+        self.stats.wire_bytes_saved += \
+            chunk.pages * ch.block_bytes - wire
+        if chunk.kind == RELOAD:
+            self.stats.reload_wire_bytes += wire
         chunk.state = "done"
 
     def drain(self, now: float, max_chunks: Optional[int] = None, *,
               kinds: Tuple[str, ...] = (RELOAD, OFFLOAD)) -> int:
         """Physically complete up to ``max_chunks`` queued chunks (FIFO).
-        Reload pages drained here are off the turn critical path by
-        construction (a future turn's settlement finds them done).
-        Returns chunks drained."""
+        Returns chunks drained; 0 therefore means the queue holds no
+        chunk of ``kinds`` — callers (``drain_offloads_until``'s break,
+        the engines' round budgets) rely on that reading, so a zero
+        ``max_chunks`` or empty ``kinds`` (which would return 0 with
+        the queue full) is rejected as a usage error instead of
+        masquerading as "queue dry". Pass ``max_chunks=None`` for
+        unbounded; callers with a possibly-zero budget guard the call
+        (``if budget > 0``).
+
+        Banking contract (pinned by tests/test_transfer_engine.py): a
+        reload chunk drained here banks its FULL modeled channel cost
+        as off-path seconds, regardless of ``now`` vs the chunk's
+        ``modeled_done``. Draining means the bytes physically landed
+        during a round — the next turn can never stall on them — so
+        the whole modeled cost was hidden in the speech window; the
+        ``modeled_done`` instant only matters for chunks still queued
+        at turn-start settlement (``finish_session``), which never
+        re-charges a drained chunk."""
+        if max_chunks is not None and max_chunks <= 0:
+            raise ValueError(
+                f"drain(max_chunks={max_chunks}): a non-positive chunk "
+                "budget would return 0 with work still queued — callers "
+                "treat 0 as 'queue dry'; guard the call instead")
+        if not kinds:
+            raise ValueError(
+                "drain(kinds=()): empty kinds matches nothing and would "
+                "return 0 with work still queued")
         drained = 0
         i = 0
         while i < len(self._queue):
@@ -246,12 +286,16 @@ class TransferEngine:
 
     # ------------------------------------------------------------ settle
     def finish_session(self, sid: str, now: float) -> Tuple[float, float]:
-        """Turn-start settlement: complete every queued reload chunk of
-        ``sid``. Chunks whose modeled DMA finished by ``now`` are free
-        (off-path — they arrived during the speech window, we only
-        materialize late); the rest are charged on-path at chunk-serial
-        channel cost. Accumulates and returns (on_path_s, off_path_s)
-        including any seconds banked by earlier round drains."""
+        """Turn-start settlement: complete every reload chunk of
+        ``sid`` *still queued* at ``now``. Queued chunks whose modeled
+        DMA finished by ``now`` settle off-path (the modeled channel
+        completed them during the speech window — only our host-side
+        bookkeeping was lazy); the rest are charged on-path at
+        chunk-serial channel cost. Chunks already drained by earlier
+        rounds are not re-charged: their full modeled cost was banked
+        off-path at drain time (see ``drain``'s banking contract) and
+        rides along in the returned split. Accumulates and returns
+        (on_path_s, off_path_s)."""
         on_s = 0.0
         off_s = self._off_s_acc.pop(sid, 0.0)
         for c in [c for c in self._queue

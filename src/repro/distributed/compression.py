@@ -2,7 +2,7 @@
 
 int8 block-quantized all-reduce with error feedback. Scheme (per leaf):
 
-  1. shared block scale   s = pmax(max|g + e|) / 127      (tiny collective)
+  1. shared block scale   s = max(pmax(max|g + e|), eps) / 127   (tiny collective)
   2. local quantization   q_i = round((g_i + e_i) / s)    int8
   3. integer reduction    Q = psum(q_i)                   (8x less traffic)
   4. decode               g_hat = Q * s / N
@@ -11,6 +11,14 @@ int8 block-quantized all-reduce with error feedback. Scheme (per leaf):
 Only the int8 payload crosses the DP ('pod') axis — 8x less DCI traffic
 than an f32 all-reduce; error feedback keeps the long-run bias bounded
 (1-bit-Adam-family argument).
+
+The quantization core (``BLOCK``, ``_pad_blocks``, ``block_scale``)
+lives in ``kvcache/quant.py`` — the same scheme encodes KV pages on the
+offload path (DESIGN.md §14), and sharing it keeps the two tiers from
+drifting. The epsilon guards the block max there, not the quotient:
+``pmax(...) / 127 + eps`` (the old form) inflated every scale, so
+max-magnitude values no longer hit ±127 and the worst-case error
+exceeded scale/2.
 
 Calling convention: each leaf carries the per-shard gradients stacked on a
 leading axis of size N = mesh.shape[axis] (i.e. the local grads *before*
@@ -23,12 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-BLOCK = 256
+from repro.kvcache.quant import BLOCK, _pad_blocks, block_scale
 
-
-def _pad_blocks(flat):
-    pad = (-flat.size) % BLOCK
-    return jnp.pad(flat, (0, pad)).reshape(-1, BLOCK), pad
+__all__ = ["BLOCK", "compressed_psum", "wire_bytes"]
 
 
 def compressed_psum(grads, mesh, axis: str, errors=None):
@@ -45,7 +50,7 @@ def compressed_psum(grads, mesh, axis: str, errors=None):
             x = g_loc[0].astype(jnp.float32) + e_loc[0]
             blocks, _ = _pad_blocks(x.reshape(-1))
             local_max = jnp.max(jnp.abs(blocks), axis=1)
-            scale = jax.lax.pmax(local_max, axis) / 127.0 + 1e-12  # [nb]
+            scale = block_scale(jax.lax.pmax(local_max, axis))  # [nb]
             q = jnp.clip(jnp.round(blocks / scale[:, None]),
                          -127, 127).astype(jnp.int8)
             n = jax.lax.psum(jnp.ones((), jnp.float32), axis)

@@ -50,9 +50,10 @@ class SeqPages:
     seq_id: str
     pages: List[int] = field(default_factory=list)   # prefix-first order
     length: int = 0                                   # tokens written
-    offloaded: Dict[int, np.ndarray] = field(default_factory=dict)
-    # offloaded: logical page index (position in `pages`) -> host copy;
-    # an offloaded slot keeps -1 in `pages`.
+    offloaded: Dict[int, object] = field(default_factory=dict)
+    # offloaded: logical page index (position in `pages`) -> host copy
+    # (a raw ndarray, or a quant.QuantizedPage on the int8 wire format
+    # — opaque here); an offloaded slot keeps -1 in `pages`.
     #
     # In-flight transfer marks (the async chunked transfer engine,
     # DESIGN.md §10). Each logical page is in exactly one state:
@@ -70,9 +71,15 @@ class SeqPages:
 
 
 class PagedPool:
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, codec=None):
         self.num_pages = num_pages
         self.page_size = page_size
+        # KV wire codec (DESIGN.md §14): when set, the synchronous
+        # offload wrapper encodes host copies (int8 payload + fp32
+        # block scales) and every reload path decodes them. Host-store
+        # entries are otherwise opaque — the page-state machine,
+        # conservation checks, and migration handoff never look inside.
+        self.codec = codec
         self.free: List[int] = list(range(num_pages - 1, -1, -1))
         self.seqs: Dict[str, SeqPages] = {}
         # Shared-prefix bookkeeping (DESIGN.md §13). Every *allocated*
@@ -182,7 +189,7 @@ class PagedPool:
         return rep
 
     def adopt(self, seq_id: str, n_pages: int, length: int,
-              offloaded: Dict[int, np.ndarray]) -> SeqPages:
+              offloaded: Dict[int, object]) -> SeqPages:
         """Install a sequence arriving from another pool (cross-replica
         migration handoff). Every page lands host-resident — the source
         drained its chunked offloads before the handoff — so adoption
@@ -341,8 +348,12 @@ class PagedPool:
         if not logical:
             return kv_pages
         phys = [s.pages[li] for li in logical]
-        src = staged if staged is not None \
-            else np.stack([s.offloaded[li] for li in logical])
+        if staged is not None:
+            src = staged
+        else:
+            from repro.kvcache.quant import decode_host
+            src = np.stack([decode_host(s.offloaded[li])
+                            for li in logical])
         kv_pages = kv_pages.at[np.asarray(phys)].set(src)
         for li in logical:
             assert li in s.loading, f"{seq_id}: page {li} not loading"
@@ -446,8 +457,10 @@ class PagedPool:
         self.cancel_loading(seq_id, cancel_lis)
         self.mark_offloading(seq_id, offload_lis)
         s = self.seq(seq_id)
+        enc = self.codec.encode if self.codec is not None \
+            else (lambda a: a)
         self.complete_offload(
-            seq_id, {li: np.asarray(kv_pages[s.pages[li]])
+            seq_id, {li: enc(np.asarray(kv_pages[s.pages[li]]))
                      for li in offload_lis})
         return len(cancel_lis) + len(offload_lis)
 

@@ -96,6 +96,13 @@ def main() -> None:
                          "chunked KV transfer budget that lands "
                          "speech-time preloads off the turn critical "
                          "path (DESIGN.md §10)")
+    ap.add_argument("--kv-quant", default=None,
+                    choices=["fp32", "int8"],
+                    help="live engine: KV wire format on the offload "
+                         "path (DESIGN.md §14). int8 block-quantizes "
+                         "host copies (~4x less modeled PCIe per page, "
+                         "tolerance-gated quality); fp32 is the "
+                         "bit-exact default")
     ap.add_argument("--replicas", type=int, default=None,
                     help="live engine: N data-parallel engine replicas "
                          "behind one gateway, with live cross-replica "
@@ -108,7 +115,8 @@ def main() -> None:
         live_only = [f"--{f.replace('_', '-')}" for f in
                      ("clock_scale", "slots", "kv_pages",
                       "preload_chunks", "replicas", "prefix_cache",
-                      "prompt_families", "family_prefix_len")
+                      "prompt_families", "family_prefix_len",
+                      "kv_quant")
                      if getattr(args, f) is not None]
         if live_only:
             ap.error(f"{', '.join(live_only)} only apply to "
@@ -182,6 +190,7 @@ def main() -> None:
                             if args.preload_chunks is not None else 1),
             fused_step=args.fused_step,
             prefix_cache=bool(args.prefix_cache),
+            kv_quant=args.kv_quant or "fp32",
             prompt_families=(args.prompt_families
                              if args.prompt_families is not None else 0),
             family_prefix_len=(args.family_prefix_len

@@ -36,6 +36,7 @@ def build_fleet_gateway(*, replicas: int = 3, policy: str = "liveserve",
                         seed: int = 0, preload_chunks: int = 1,
                         fused_step: bool = True,
                         prefix_cache: bool = False,
+                        kv_quant: str = "fp32",
                         interconnect_gb_s: float = 50.0,
                         mitigator: Optional[StragglerMitigator] = None,
                         strike_threshold: int = 3,
@@ -56,7 +57,8 @@ def build_fleet_gateway(*, replicas: int = 3, policy: str = "liveserve",
                             num_pages=num_pages, clock=clock, mesh=mesh,
                             transfer_chunks_per_round=preload_chunks,
                             fused_step=fused_step,
-                            prefix_cache=prefix_cache)
+                            prefix_cache=prefix_cache,
+                            kv_quant=kv_quant)
         for _ in range(replicas)]
     # one warm-up warms the fleet: replicas share the jitted step
     # through the config-keyed cache

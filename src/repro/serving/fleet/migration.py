@@ -118,7 +118,8 @@ class MigrationCoordinator:
         plan.state = NETWORK
         m = self.metrics
         m.migrations += 1
-        m.migration_bytes += plan.pages * self.replicas.block_bytes
+        m.migration_bytes += \
+            self.replicas.interconnect.wire_bytes(plan.pages)
         # drain + network seconds land off-path here; a demanded
         # completion reclassifies its residual below
         m.migration_off_path_s += \

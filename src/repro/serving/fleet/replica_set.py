@@ -28,10 +28,16 @@ class ReplicaSet:
         bb = engines[0].kv.channel.block_bytes
         assert all(e.kv.channel.block_bytes == bb for e in engines), \
             "replicas must share a page geometry (same KV bytes/page)"
+        ws = engines[0].kv.channel.wire_scale
+        assert all(e.kv.channel.wire_scale == ws for e in engines), \
+            "replicas must share a KV wire format (same kv_quant)"
         self.engines = list(engines)
         self.clock = clock
         self.block_bytes = bb
-        self.interconnect = TransferChannel(interconnect_gb_s, bb)
+        # MIGRATE chunks carry host copies already in wire format, so
+        # the modeled NIC prices the same compressed bytes PCIe does
+        self.interconnect = TransferChannel(interconnect_gb_s, bb,
+                                            wire_scale=ws)
 
     def __len__(self) -> int:
         return len(self.engines)

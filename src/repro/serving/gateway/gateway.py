@@ -258,6 +258,8 @@ class RealtimeGateway:
         self._metrics.pages_shared = max(
             (getattr(e, "peak_shared_pages", 0) for e in self._engines()),
             default=0)
+        self._metrics.kv_wire_bytes_saved = sum(
+            e.transfer.stats.wire_bytes_saved for e in self._engines())
         return self._metrics
 
     # ------------------------------------------------------------ records
@@ -448,6 +450,8 @@ class RealtimeGateway:
         rounds under the single-threaded asyncio contract)."""
 
     def _idle_drain(self) -> None:
+        if self.cfg.idle_transfer_chunks <= 0:   # budget 0 = drains off
+            return
         for eng in self._engines():
             eng.drain_transfers(self.cfg.idle_transfer_chunks)
 

@@ -80,7 +80,8 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                   mesh=None, seed: int = 0,
                   preload_chunks: int = 1,
                   fused_step: bool = True,
-                  prefix_cache: bool = False) -> RealtimeGateway:
+                  prefix_cache: bool = False,
+                  kv_quant: str = "fp32") -> RealtimeGateway:
     """``mesh``: a ('data','model') jax mesh shards the engine's page
     store over 'model' (DESIGN.md §9) — on a laptop run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
@@ -99,7 +100,8 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                               mesh=mesh,
                               transfer_chunks_per_round=preload_chunks,
                               fused_step=fused_step,
-                              prefix_cache=prefix_cache)
+                              prefix_cache=prefix_cache,
+                              kv_quant=kv_quant)
     _warm_engine(eng, min(prefill_chunk, round_token_budget))
     gw = RealtimeGateway(eng, cfg=GatewayConfig(
         policy=policy, audio_per_token_s=audio_per_token_s,

@@ -393,6 +393,8 @@ class ReplayGateway:
         self.metrics.pages_shared = max(
             (getattr(e, "peak_shared_pages", 0) for e in self._engines()),
             default=0)
+        self.metrics.kv_wire_bytes_saved = sum(
+            e.transfer.stats.wire_bytes_saved for e in self._engines())
         return self.metrics
 
 

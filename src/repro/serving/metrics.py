@@ -66,6 +66,9 @@ class Metrics:
     # shared-prefix fields (zero when the prefix cache is off, keeping
     # the sim/gateway summary schema a strict dict diff)
     pages_shared: int = 0                  # peak physical pages at rc > 1
+    # KV wire-format fields (DESIGN.md §14) — zero on fp32 planes
+    kv_wire_bytes_saved: float = 0.0       # logical minus wire bytes moved
+    quant_token_flip_rate: float = 0.0     # quality-gate flip rate, if run
 
     def ttfps(self):
         return sorted(t.ttfp for t in self.turns if t.ttfp is not None)
@@ -158,4 +161,6 @@ class Metrics:
                                      for t in self.turns),
             "prefix_hit_frac": self.prefix_hit_frac(),
             "pages_shared": self.pages_shared,
+            "kv_wire_bytes_saved": self.kv_wire_bytes_saved,
+            "quant_token_flip_rate": self.quant_token_flip_rate,
         }

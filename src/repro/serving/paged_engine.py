@@ -54,6 +54,7 @@ from repro.core.transfer_engine import MIGRATE, TransferEngine
 from repro.kernels.paged_attention import paged_attention, \
     paged_prefill_attention
 from repro.kvcache.paged import OutOfPages, PagedPool
+from repro.kvcache.quant import KVWireCodec
 from repro.models import init_cache, prefill
 from repro.models import layers as L
 from repro.models.model import _embed, _logits, _mlp_block
@@ -260,7 +261,8 @@ class PagedRealtimeEngine:
                  chunk_pages: Optional[int] = None,
                  transfer_chunks_per_round: int = 1,
                  fused_step: bool = True,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 kv_quant: str = "fp32"):
         assert cfg.family in ("dense", "moe", "vlm") and cfg.mla is None \
             and cfg.sliding_window is None, \
             "paged engine serves global-attention KV families"
@@ -276,7 +278,11 @@ class PagedRealtimeEngine:
         self.scratch_page = self.num_pages     # physical page beyond pool
         self.clock = clock or _StepClock()
         self.monitor = RuntimeMonitor(self.clock)
-        self.pool = PagedPool(self.num_pages, page_size)
+        # KV wire format (DESIGN.md §14): int8 block-quantizes every host
+        # copy on the offload path; fp32 is the bit-exact control.
+        self.kv_quant = kv_quant
+        self.codec = KVWireCodec(kv_quant)
+        self.pool = PagedPool(self.num_pages, page_size, codec=self.codec)
 
         # tensor-sharded page store (DESIGN.md §9): pages shard KV heads
         # (or page slots) over the mesh's 'model' axis; weights, block
@@ -306,6 +312,12 @@ class PagedRealtimeEngine:
         assert self.kv.capacity == self.num_pages \
             and self.kv.block_size == page_size, \
             "KVManager accounting must be 1:1 with pool pages"
+        # price the wire format into the modeled PCIe channel before the
+        # transfer engine sizes its chunks off transfer_time(1): every
+        # consumer (chunk sizing, preload admission, stall settlement,
+        # migration) then sees compressed bytes. block_bytes stays the
+        # logical page size for capacity accounting.
+        self.kv.channel.wire_scale = self.codec.wire_scale(dtype)
         # the async chunked transfer engine (DESIGN.md §10): DRAM<->HBM
         # movement queues as page-group chunks drained by run_round (and
         # the gateways' idle loops); async_transfers=False degrades to
@@ -365,6 +377,10 @@ class PagedRealtimeEngine:
         self.fused_launches = 0                # fused-plane step launches
         self.peak_shared_pages = 0             # max pages with refcount>1
         self.cow_copies = 0                    # copy-on-write page copies
+        # quality-gate tap: when set, called as logit_tap(sid, logits)
+        # for every fed row (fused rows report last-valid-token logits —
+        # the ones the argmax commits)
+        self.logit_tap = None
 
     # ------------------------------------------------------------ pages
     def _place_pages(self) -> None:
@@ -475,7 +491,7 @@ class PagedRealtimeEngine:
         wall-time measurement — blocking on the whole page store would
         over-synchronize unrelated decode work (ISSUE 4 satellite)."""
         s = self.pool.seq(sid)
-        host = np.stack([s.offloaded[li] for li in lis])
+        host = np.stack([self.codec.decode(s.offloaded[li]) for li in lis])
         t0 = time.perf_counter()
         if self.layout is not None:
             staged = self.layout.stage_host_chunk(host)
@@ -498,7 +514,7 @@ class PagedRealtimeEngine:
         hk = np.asarray(self.k_pages[:, phys])     # [L, n, page, Hkv, hd]
         hv = np.asarray(self.v_pages[:, phys])
         self.pool.complete_offload(
-            sid, {li: np.stack([hk[:, i], hv[:, i]])
+            sid, {li: self.codec.encode(np.stack([hk[:, i], hv[:, i]]))
                   for i, li in enumerate(lis)})
         self._sync_page_counts(sid)
 
@@ -1040,7 +1056,8 @@ class PagedRealtimeEngine:
                     hk = np.asarray(self.k_pages[:, phys])
                     hv = np.asarray(self.v_pages[:, phys])
                     was_owner, freed = self.pool.detach_page(sid, li)
-                    s.offloaded[li] = np.stack([hk, hv])
+                    s.offloaded[li] = self.codec.encode(
+                        np.stack([hk, hv]))
                     if was_owner:
                         # stays for its sharers, cache-charged now
                         kvs.hbm_blocks -= 1
@@ -1407,6 +1424,9 @@ class PagedRealtimeEngine:
             jnp.asarray(tabs.block_tables), jnp.asarray(tabs.seq_lens),
             jnp.asarray(tabs.write_page), jnp.asarray(tabs.write_slot))
         logits = np.asarray(logits)
+        if self.logit_tap is not None:
+            for i, (sid, _) in feeds.items():
+                self.logit_tap(sid, logits[i])
         return {i: logits[i] for i in feeds}
 
     def _run_chunk_rows(self, feeds: Dict[int, tuple]) \
@@ -1432,6 +1452,9 @@ class PagedRealtimeEngine:
             jnp.asarray(tabs.write_slots))
         self.fused_launches += 1
         logits = np.asarray(logits)
+        if self.logit_tap is not None:
+            for i, (sid, _) in feeds.items():
+                self.logit_tap(sid, logits[i])
         return {i: logits[i] for i in feeds}
 
     def _close_turn(self, slot: int, *, aborted: bool) -> None:

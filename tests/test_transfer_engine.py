@@ -606,3 +606,80 @@ def test_conservation_random_interleavings(tiny, seed):
 @settings(max_examples=20, deadline=None)
 def test_conservation_property(tiny, ops):
     _conservation_driver(tiny, ops)
+
+
+# ======================================================================
+# drain argument validation + the off-path banking contract
+# ======================================================================
+def _queued_reload(tiny):
+    """Engine with a 4-page reload queued on the slow channel (1 s per
+    page, chunk_pages=1 -> four 1-page chunks, none drained yet)."""
+    rng = np.random.default_rng(21)
+    cfg, _ = tiny
+    eng = _engine(tiny, pcie_gb_s=_slow_pcie(cfg))
+    eng.add_session("a", rng.integers(0, cfg.vocab_size, size=14),
+                    max_new_tokens=6)
+    eng.run_to_completion()
+    assert eng.kv.evict(4, eng.clock.now()) == 4
+    eng.flush_transfers()
+    eng.user_speech_start("a", expected_dur_s=100.0)
+    assert eng.transfer.pending_reload_pages("a") == 4
+    return eng
+
+
+def test_drain_rejects_zero_budget_and_empty_kinds(tiny):
+    """A zero/negative chunk budget or empty kinds would return 0 with
+    work still queued — and every caller reads 0 as 'queue dry' (the
+    demand-drain loop breaks on it). Usage error, not a silent no-op."""
+    eng = _queued_reload(tiny)
+    now = eng.clock.now()
+    with pytest.raises(ValueError, match="max_chunks=0"):
+        eng.transfer.drain(now, 0)
+    with pytest.raises(ValueError, match="max_chunks=-1"):
+        eng.transfer.drain(now, -1)
+    with pytest.raises(ValueError, match="kinds"):
+        eng.transfer.drain(now, 1, kinds=())
+    # nothing drained by the rejected calls...
+    assert eng.transfer.pending_reload_pages("a") == 4
+    # ...and the legitimate spellings still work
+    assert eng.transfer.drain(now, 1) == 1
+    assert eng.transfer.drain(now, None) == 3
+    assert eng.transfer.drain(now, 1) == 0      # genuinely dry now
+    eng.check_invariants()
+
+
+def test_demand_drain_loop_with_satisfied_predicate(tiny):
+    """The demand-drain loop never passes a zero budget: a predicate
+    that is already true completes nothing and touches no chunk."""
+    eng = _queued_reload(tiny)
+    now = eng.clock.now()
+    assert eng.transfer.drain_offloads_until(now, lambda: True) == 0
+    assert eng.transfer.pending_reload_pages("a") == 4
+    # and with offloads queued it drains exactly until satisfied
+    assert eng.transfer.drain_offloads_until(now, lambda: False) == 0 \
+        and eng.transfer.pending_offload_pages() == 0  # dry -> break
+
+
+def test_drained_chunk_banks_full_modeled_cost(tiny):
+    """The banking contract, pinned at the ledger level (the docstring
+    reconciliation satellite): a chunk physically drained by a round
+    banks its FULL modeled channel cost off-path even when the drain
+    happens long before the chunk's ``modeled_done``; settlement
+    charges only the still-queued remainder and never re-charges the
+    drained chunk — total charged is exactly the job's modeled cost."""
+    eng = _queued_reload(tiny)
+    per_page = eng.kv.channel.transfer_time(1)
+    now = eng.clock.now()
+    # drain one chunk immediately: wall-now is far before even the
+    # first chunk's modeled completion (now + 1 s)
+    assert eng.drain_transfers(1) == 1
+    on, off = eng.transfer.finish_session("a", now)
+    assert off == pytest.approx(per_page)       # banked at drain time
+    assert on == pytest.approx(3 * per_page)    # queued remainder
+    stats = eng.transfer.stats
+    assert stats.reload_pages_off_path == 1
+    assert stats.reload_pages_on_path == 3
+    assert on + off == pytest.approx(4 * per_page)   # no double charge
+    assert eng.transfer.pop_split("a") == (pytest.approx(on),
+                                           pytest.approx(off))
+    eng.check_invariants()
