@@ -32,6 +32,11 @@ class SessionKV:
     hbm_blocks: int = 0          # resident prefix range [0, hbm_blocks)
     pinned: bool = False         # a live request is using this KV
     protected_until: float = -1.0  # preload protection TTL
+    # tool-pause protection (distinct state, distinct TTL): the session
+    # idles mid-turn while an external tool runs; its next use is the
+    # tool's expected return, not the reply-gap EMA, and its hot KV must
+    # not be evicted out from under the resume
+    tool_protected_until: float = -1.0
     last_access: float = 0.0
     discarded: bool = False      # 'none' policy: KV dropped, must re-prefill
     # Shared-prefix accounting (DESIGN.md §13): `shared_blocks` are
@@ -48,7 +53,8 @@ class SessionKV:
                    - self.hbm_blocks)
 
     def evictable(self, now: float) -> int:
-        if self.pinned or now < self.protected_until:
+        if self.pinned or now < self.protected_until \
+                or now < self.tool_protected_until:
             return 0
         return max(0, self.hbm_blocks - self.shared_pinned_blocks)
 
@@ -109,6 +115,7 @@ class KVManager:
                  policy: str = "next_use", index_mode: str = "heap",
                  pcie_gb_s: float = 25.0,
                  protect_ttl_s: float = 10.0,
+                 tool_protect_ttl_s: float = 30.0,
                  protected_cap_blocks: Optional[int] = None,
                  clock=None):
         assert policy in ("next_use", "lru", "none")
@@ -121,6 +128,7 @@ class KVManager:
         self.index_mode = index_mode
         self.clock = clock
         self.protect_ttl_s = protect_ttl_s
+        self.tool_protect_ttl_s = tool_protect_ttl_s
         self.protected_cap = protected_cap_blocks or max(
             1, capacity_blocks // 4)
         self.sessions: Dict[str, SessionKV] = {}
@@ -257,6 +265,13 @@ class KVManager:
             return now                      # fail-closed: behaves like LRU
         if self.monitor.immediate_reuse(sid):
             return now                      # immediate reuse: protect
+        view = self.monitor.view(sid)
+        tool_until = getattr(view, "tool_call_until", None) \
+            if view is not None else None
+        if tool_until is not None and tool_until > now:
+            # mid-turn tool pause: next use is the tool's expected
+            # return, not the playback + reply-gap estimate
+            return tool_until
         t_play = self.monitor.remaining_playback_s(sid)
         t_reply = self.monitor.reply_gap_s(sid)
         return now + t_play + t_reply
@@ -495,3 +510,21 @@ class KVManager:
                         if s.protected_until > now)
         if protected * self.block_size < self.protected_cap:
             kv.protected_until = now + self.protect_ttl_s
+
+    def protect_tool(self, sid: str, now: float,
+                     expected_latency_s: float) -> None:
+        """Tool-pause protection: hold the session's KV resident until
+        the tool's expected return (capped by its own TTL so a tool that
+        never comes back cannot squat on the pool). Distinct from the
+        preload TTL — the two states expire independently and either one
+        alone keeps the blocks unevictable."""
+        kv = self.session(sid)
+        kv.tool_protected_until = now + min(max(0.0, expected_latency_s),
+                                            self.tool_protect_ttl_s)
+
+    def clear_tool_protection(self, sid: str, now: float) -> None:
+        """The tool returned (or the session resumed): lift the hold and
+        re-rank the session under its refreshed next-use estimate."""
+        kv = self.session(sid)
+        kv.tool_protected_until = -1.0
+        self.refresh_session(sid, now)

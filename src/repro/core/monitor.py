@@ -79,6 +79,16 @@ class SessionView:
     reply_gap_ema: Optional[float] = None   # user think-time estimate (s)
     last_playback_end: Optional[float] = None
     expected_speech_end: Optional[float] = None
+    # full-duplex frame cadence: a periodic-frame session's per-frame
+    # deadline walks forward one period per emitted token. The period is
+    # sticky across turns (it marks the session as duplex for preload
+    # admission); the deadline only lives while a response streams.
+    frame_period_s: float = 0.0
+    frame_deadline: Optional[float] = None
+    # mid-turn tool pause: the wall-clock instant the external tool is
+    # expected to return — Eq. 4 next-use reads this instead of the
+    # reply-gap EMA while it is in the future.
+    tool_call_until: Optional[float] = None
     # physical KV placement (reported by the paged engine's data plane)
     resident_pages: int = 0
     offloaded_pages: int = 0
@@ -105,6 +115,15 @@ class RuntimeMonitor:
         v.turn_index = turn_index
         v.barge_in = False
         v.playback = PlaybackState()
+        # a turn can start without a SpeechEnd (full duplex, tool-call
+        # resume): clear the previous utterance's state here so Eq. 4
+        # next-use and the preload window never read last turn's
+        # estimate as if it were current. frame_deadline stays — it was
+        # armed by THIS turn's request (on_frame_turn) and anchors the
+        # miss accounting at frame arrival, queueing delay included.
+        v.speaking = False
+        v.expected_speech_end = None
+        v.tool_call_until = None
 
     def on_audio(self, session_id: str, dur_s: float) -> None:
         v = self.register(session_id)
@@ -114,6 +133,7 @@ class RuntimeMonitor:
         v = self.register(session_id)
         v.playback.complete = True
         v.last_playback_end = max(v.playback.play_end, self.clock.now())
+        v.frame_deadline = None
 
     def on_speech_start(self, session_id: str,
                         expected_dur_s: Optional[float] = None) -> None:
@@ -143,6 +163,35 @@ class RuntimeMonitor:
         v.speech_start_time = self.clock.now()
         v.playback.complete = True
         v.last_playback_end = self.clock.now()
+        v.frame_deadline = None
+
+    def on_frame_turn(self, session_id: str, frame_period_s: float) -> None:
+        """A periodic-frame (full-duplex) turn was requested: arm the
+        frame clock. The first frame is due one period from now; every
+        emitted token advances the deadline by one period."""
+        v = self.register(session_id)
+        v.frame_period_s = frame_period_s
+        v.frame_deadline = self.clock.now() + frame_period_s
+
+    def on_tool_call_start(self, session_id: str,
+                           expected_latency_s: float) -> None:
+        """The turn ended in a tool call: the session idles with hot KV
+        until roughly now + expected_latency_s. Not a speech event — the
+        reply-gap EMA must not learn tool latencies as think time."""
+        v = self.register(session_id)
+        v.tool_call_until = self.clock.now() + max(0.0, expected_latency_s)
+        v.speaking = False
+        v.expected_speech_end = None
+
+    def on_tool_call_result(self, session_id: str,
+                            resume_gap_s: float = 0.0) -> None:
+        """The tool returned: the resume turn arrives in ~resume_gap_s.
+        Opens a preload window of that width (expected_speech_end) so an
+        evicted session's reload hides in the gap, again without
+        touching the speech state or the reply-gap EMA."""
+        v = self.register(session_id)
+        v.tool_call_until = None
+        v.expected_speech_end = self.clock.now() + max(0.0, resume_gap_s)
 
     def on_page_movement(self, session_id: str, *, resident: int,
                          offloaded: int) -> None:

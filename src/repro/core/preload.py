@@ -30,6 +30,13 @@ class PendingPreload:
     session_id: str
     transfer: Transfer
     deadline: float
+    # merge accounting: a second admission before the turn arrives
+    # (speech -> barge-in) folds into the same logical entry instead of
+    # orphaning the first transfer — `blocks` and `span_s` accumulate
+    # across the merged transfers so cancel rollback and the off-path
+    # split stay page- and second-exact
+    blocks: int = 0
+    span_s: float = 0.0
 
 
 class Preloader:
@@ -73,6 +80,12 @@ class Preloader:
         if view is not None and view.expected_speech_end is not None:
             window = max(0.0, view.expected_speech_end - now) \
                 + self.encode_delay_s
+        elif view is not None \
+                and getattr(view, "frame_period_s", 0.0) > 0.0:
+            # full duplex: the turn request fires at speech start, so
+            # the only window is one frame period — honest admission
+            # (a transfer that cannot hide in a frame is refused)
+            window = view.frame_period_s + self.encode_delay_s
         else:
             window = self.speech_prior_s + self.encode_delay_s
         # only blocks whose bytes truly sit on the host cross the
@@ -94,7 +107,25 @@ class Preloader:
             self.stats.skipped += 1
             return None
         self.stats.admitted += 1
-        self.pending[sid] = PendingPreload(sid, transfer, now + window)
+        span = transfer.done - transfer.start
+        prior = self.pending.get(sid)
+        if prior is not None and not prior.transfer.cancelled:
+            # double speech-start (speech -> barge-in) before the turn
+            # arrived: merge with the still-pending entry instead of
+            # overwriting it. The later-finishing transfer anchors the
+            # hit/fallback settlement, the deadline follows the newest
+            # speech estimate, and the accumulated blocks/span keep
+            # cancel and the overlap split exact for both transfers.
+            keep = transfer if transfer.done >= prior.transfer.done \
+                else prior.transfer
+            self.pending[sid] = PendingPreload(
+                sid, keep, now + window,
+                blocks=prior.blocks + transfer.blocks,
+                span_s=prior.span_s + span)
+        else:
+            self.pending[sid] = PendingPreload(
+                sid, transfer, now + window,
+                blocks=transfer.blocks, span_s=span)
         return transfer
 
     def cancel(self, sid: str, now: float) -> None:
@@ -119,8 +150,8 @@ class Preloader:
             return
         p.transfer.cancelled = True
         kv = self.kv.session(sid)
-        kv.hbm_blocks = max(0, kv.hbm_blocks - p.transfer.blocks)
-        self.kv.reloaded_blocks -= p.transfer.blocks
+        kv.hbm_blocks = max(0, kv.hbm_blocks - p.blocks)
+        self.kv.reloaded_blocks -= p.blocks
         self.stats.cancelled += 1
 
     # ------------------------------------------------------------ turn
@@ -132,7 +163,7 @@ class Preloader:
             return self._on_turn_ready_ledger(sid, now)
         p = self.pending.pop(sid, None)
         if p is not None and not p.transfer.cancelled:
-            span = p.transfer.done - p.transfer.start
+            span = p.span_s
             if p.transfer.done <= now:
                 self.stats.hits += 1
                 self._last_class[sid] = "hit"

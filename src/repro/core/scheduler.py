@@ -46,6 +46,12 @@ class RoundBudget:
     free_kv_blocks: int              # allocatable KV blocks at this stage
     max_batch: int = 256
     block_size: int = 16
+    # batch rows available for NEW bindings this round (None = untracked).
+    # A queued turn (``req.slot_bound`` False) needs one to enter the
+    # engine; without this credit an urgent queued turn could outrank
+    # every live decode slot yet bind nowhere — eating the whole batch
+    # while the slots it is waiting on are never scheduled to finish
+    free_slots: Optional[int] = None
 
     def need_blocks(self, req: Request, chunk: int) -> int:
         """KV blocks this round actually allocates: prefill chunks round
@@ -105,6 +111,16 @@ class UrgencyScheduler:
         cfg = self.cfg
         buf = self._buffer(req)
         view = self.monitor.view(req.session_id)
+        deadline = getattr(view, "frame_deadline", None) \
+            if view is not None else None
+        if deadline is not None:
+            # periodic-frame (full-duplex) session: urgency is the
+            # slack to the next frame deadline, not the playback buffer
+            # — a frame due within P_safe joins U0 (its key, seconds
+            # until trouble, sorts compatibly with buffer seconds)
+            slack = deadline - now
+            if slack <= cfg.p_safe_s:
+                return 0, slack, buf
         started = bool(view and view.playback.started
                        and not view.playback.complete)
         if not started or buf is None:
@@ -162,25 +178,50 @@ class UrgencyScheduler:
 
         batch, chunks = [], {}
         for r in order:
+            needs_slot = budget.free_slots is not None \
+                and not r.slot_bound
+            if needs_slot and budget.free_slots <= 0:
+                # no batch row can bind this turn: skip, don't break —
+                # slots are a different resource from the token budget,
+                # and stopping here would starve the live decode slots
+                # this very turn is waiting on (head-of-line livelock)
+                continue
             chunk = self.chunk_for(r)
             if not budget.fits(r, chunk):
                 break                 # Algorithm 1: admission stops
             budget.admit(r, chunk)
+            if needs_slot:
+                budget.free_slots -= 1
             batch.append(r)
             chunks[r.req_id] = chunk
             r.last_scheduled = now
         return ScheduleDecision(batch=batch, chunks=chunks, classes=classes,
                                 utilities=utilities, held=held)
 
-    def hold_wake_s(self, decision: ScheduleDecision) -> Optional[float]:
+    def hold_wake_s(self, decision: ScheduleDecision,
+                    now: Optional[float] = None) -> Optional[float]:
         """How long (in clock seconds) until the earliest pace-held
         session drains back to the pacing threshold — playback consumes
         buffer at 1 s/s, so a driver with nothing else to run can sleep
-        this long instead of spinning. None when nothing is held."""
+        this long instead of spinning. None when nothing is held.
+
+        With ``now``, a held periodic-frame session also bounds the wake
+        by its frame slack: the driver must be back before the deadline
+        slack shrinks to P_safe (when classify promotes the session to
+        U0), so a hold can never turn into a frame miss by itself."""
         if not decision.held:
             return None
-        return min(max(0.01, buf - self.cfg.p_max_s)
-                   for _, buf in decision.held)
+        wakes = []
+        for req, buf in decision.held:
+            wake = buf - self.cfg.p_max_s
+            if now is not None:
+                view = self.monitor.view(req.session_id)
+                deadline = getattr(view, "frame_deadline", None) \
+                    if view is not None else None
+                if deadline is not None:
+                    wake = min(wake, deadline - now - self.cfg.p_safe_s)
+            wakes.append(max(0.01, wake))
+        return min(wakes)
 
 
 class FCFSScheduler(UrgencyScheduler):

@@ -48,6 +48,9 @@ class Request:
     reload_off_path_s: float = 0.0      # reload seconds hidden off-path
     prefix_hit_tokens: int = 0          # prompt tokens served from the
     #                                     shared prefix cache (skip-ahead)
+    slot_bound: bool = True             # already holds a batch row; False
+    #                                     for queued turns that still need
+    #                                     a free slot to bind
 
     @property
     def total_context(self) -> int:
@@ -71,6 +74,18 @@ class Turn:
     response_tokens: int         # oracle: talker tokens of the reply
     barge_in: bool = False
     barge_cut_s: float = 0.0     # played-audio seconds at which user barges
+    # full-duplex: > 0 marks a periodic-frame turn whose per-frame
+    # deadline is this many output-token durations (dimensionless so the
+    # serving side can scale by its own audio_per_token_s)
+    frame_period_tokens: float = 0.0
+    # agentic: the turn ends in a tool call — the session idles with hot
+    # KV for ~tool_latency_s, then resumes without a new utterance
+    tool_call: bool = False
+    tool_latency_s: float = 0.0
+    # agent handoff: before this turn's speech, the client requests the
+    # session move to the model config / replica ``handoff_target``
+    handoff: bool = False
+    handoff_target: int = 0
 
 
 @dataclass

@@ -47,7 +47,15 @@ def main() -> None:
                     help="sim engine only; live/real serve the reduced "
                          "CPU-runnable config")
     ap.add_argument("--workload", default=None,
-                    choices=["sharegpt", "interactive", "mixed"])
+                    choices=["sharegpt", "interactive", "mixed",
+                             "duplex", "toolcall", "handoff"],
+                    help="duplex: full-duplex periodic-frame sessions "
+                         "(per-token deadlines, deadline_miss_rate); "
+                         "toolcall: agentic tool-call pauses (hot-KV "
+                         "idle + resume without re-prefill); handoff: "
+                         "mid-conversation transfer to another model "
+                         "config (use with --replicas >= 2). These "
+                         "three need --engine live")
     ap.add_argument("--system", default=None,
                     choices=["liveserve", "vllm-omni", "vllm-omni-wo"])
     ap.add_argument("--sessions", type=int, default=None)
@@ -158,6 +166,11 @@ def main() -> None:
 
     # shared workload defaults for sim and live
     workload = args.workload or "interactive"
+    if args.engine != "live" \
+            and workload in ("duplex", "toolcall", "handoff"):
+        ap.error(f"--workload {workload} drives gateway-level "
+                 f"interaction events (frame deadlines, tool pauses, "
+                 f"handoffs); use --engine live")
     system = args.system or "liveserve"
     sessions = args.sessions if args.sessions is not None else 32
     barge_in = args.barge_in if args.barge_in is not None else 0.0

@@ -26,6 +26,7 @@ from repro.serving.gateway.events import (BargeIn, Hangup, SpeechStart,
 from repro.serving.gateway.gateway import (GatewayConfig, RealtimeGateway,
                                            build_scheduler, control_round)
 from repro.serving.fleet.migration import (MigrationCoordinator,
+                                           consider_handoff,
                                            consider_migration)
 from repro.serving.fleet.replica_set import ReplicaSet
 from repro.serving.fleet.router import SessionRouter
@@ -96,6 +97,12 @@ class FleetGateway(RealtimeGateway):
         super()._handle(ev)
         if isinstance(ev, Hangup):
             self.router.on_session_end(sid)
+
+    def _on_handoff(self, ev) -> None:
+        # client-requested agent handoff: a targeted migration plan; the
+        # following SpeechStart's consider_migration sees it and keeps
+        # the source preload from re-paging the departing KV
+        consider_handoff(self, ev.session_id, ev.target)
 
     # ------------------------------------------------------------ rounds
     def _record_admit(self, sid, r) -> None:

@@ -67,6 +67,7 @@ class MigrationPlan:
     state: str = DRAINING
     net_done: float = 0.0
     reason: str = ""                   # cancellation reason, if any
+    kind: str = "migrate"              # migrate | handoff (client-requested)
 
 
 class MigrationCoordinator:
@@ -80,10 +81,11 @@ class MigrationCoordinator:
 
     # ------------------------------------------------------- lifecycle
     def start(self, session_id: str, src: int, dst: int,
-              now: float) -> MigrationPlan:
+              now: float, *, kind: str = "migrate") -> MigrationPlan:
         assert session_id not in self.plans, session_id
         pages = self.replicas[src].migrate_out_begin(session_id)
-        plan = MigrationPlan(session_id, src, dst, now, pages=pages)
+        plan = MigrationPlan(session_id, src, dst, now, pages=pages,
+                             kind=kind)
         self.plans[session_id] = plan
         return plan
 
@@ -118,6 +120,8 @@ class MigrationCoordinator:
         plan.state = NETWORK
         m = self.metrics
         m.migrations += 1
+        if plan.kind == "handoff":
+            m.handoffs += 1
         m.migration_bytes += \
             self.replicas.interconnect.wire_bytes(plan.pages)
         # drain + network seconds land off-path here; a demanded
@@ -188,6 +192,8 @@ class MigrationCoordinator:
         self.metrics.migration_on_path_s += request.reload_stall_s
         self.metrics.migration_off_path_s += request.reload_off_path_s
         rec.migrated = True
+        if plan.kind == "handoff":
+            rec.handoff = True
         plan.state = DONE
         self.log.append(self.plans.pop(session_id))
 
@@ -253,4 +259,35 @@ def consider_migration(gw, session_id: str) -> bool:
     if dst is None:
         return False
     mig.start(session_id, src, dst, gw.clock.now())
+    return True
+
+
+def consider_handoff(gw, session_id: str, target: int) -> bool:
+    """Shared HandoffRequest hook for both fleet gateways: same
+    candidacy rules as ``consider_migration`` (idle, has KV, no queued
+    turn) but the destination is the client's requested model config,
+    not a drain/rebalance decision. The transfer itself is the ordinary
+    four-state migration plan, tagged kind='handoff'. Returns True iff
+    a plan is active afterwards — the caller then suppresses the
+    source-side preload at the following speech start (the plan's
+    ``consider_migration`` short-circuit does that automatically)."""
+    mig, router = gw.migrator, gw.router
+    if session_id in mig.plans:
+        return True                      # one move at a time
+    src = router.placement.get(session_id)
+    if src is None:
+        return False
+    eng = gw.replicas[src]
+    sess = eng.sessions.get(session_id)
+    if sess is None or sess.ended or sess.kv_len == 0:
+        return False                     # nothing committed to hand off
+    if session_id in gw._pending:
+        return False
+    if any(s is not None and s.session_id == session_id
+           for s in eng.slot_state.values()):
+        return False                     # live turn: the move must wait
+    dst = router.request_handoff(session_id, target)
+    if dst is None:
+        return False
+    mig.start(session_id, src, dst, gw.clock.now(), kind="handoff")
     return True

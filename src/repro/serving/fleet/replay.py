@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 from repro.core.scheduler import SchedulerConfig
 from repro.distributed.fault_tolerance import StragglerMitigator
 from repro.serving.fleet.migration import (MigrationCoordinator,
+                                           consider_handoff,
                                            consider_migration)
 from repro.serving.fleet.replica_set import ReplicaSet
 from repro.serving.fleet.router import SessionRouter
@@ -70,21 +71,31 @@ class FleetReplayGateway(ReplayGateway):
         self.migrator.pump(self.clock.now())
 
     # ----------------------------------------------------- client events
+    def _handoff_request(self, sid: str, target: int) -> None:
+        consider_handoff(self, sid, target)
+
     def _speech_start(self, s, ti: int) -> None:
         sid = s.session_id
-        _, _, speech_dur, _ = self._clamped_turn(s, ti)
+        _, _, speech_dur, _, turn = self._clamped_turn(s, ti)
+        if turn.handoff:
+            self._handoff_request(sid, turn.handoff_target)
         if consider_migration(self, sid):
-            # migrating: telemetry only; the source preload must not
-            # fire (it would cancel the migration's offload chunks)
-            self._eng(sid).monitor.on_speech_start(sid, speech_dur)
-            self._push(self.clock.now() + speech_dur,
-                       self._turn_request, s, ti)
+            # migrating (drain/rebalance or a just-started handoff):
+            # telemetry only; the source preload must not fire (it
+            # would cancel the migration's own offload chunks)
+            if turn.frame_period_tokens > 0.0:
+                self._eng(sid).monitor.on_speech_start(sid)
+                self._push(self.clock.now(), self._turn_request, s, ti)
+            else:
+                self._eng(sid).monitor.on_speech_start(sid, speech_dur)
+                self._push(self.clock.now() + speech_dur,
+                           self._turn_request, s, ti)
             return
         super()._speech_start(s, ti)
 
-    def _turn_request(self, s, ti: int) -> None:
+    def _turn_request(self, s, ti: int, resume: bool = False) -> None:
         self.migrator.demand_complete(s.session_id, self.clock.now())
-        super()._turn_request(s, ti)
+        super()._turn_request(s, ti, resume)
 
     def _barge(self, s, ti: int) -> None:
         self.migrator.on_barge(s.session_id, self.clock.now())

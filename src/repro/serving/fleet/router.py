@@ -126,6 +126,21 @@ class SessionRouter:
                 return dst
         return None
 
+    def request_handoff(self, session_id: str,
+                        target: int) -> Optional[int]:
+        """Client-requested agent handoff to a specific model config.
+        Pure policy like ``maybe_migrate`` (the caller owns candidacy):
+        the requested target maps onto the fleet modulo its size —
+        deterministic from the trace alone, so the decision log stays
+        twin-comparable — and self-moves or draining destinations are
+        refused (the session simply stays put)."""
+        src = self.placement[session_id]
+        dst = target % len(self.replicas)
+        if dst == src or dst in self.draining:
+            return None
+        self.decisions.append(("handoff", session_id, src, dst))
+        return dst
+
     def on_migrated(self, session_id: str, dst: int) -> None:
         src = self.placement[session_id]
         self.placement[session_id] = dst
@@ -173,3 +188,6 @@ class SessionRouter:
     # ------------------------------------------------------- queries
     def migration_decisions(self) -> List[tuple]:
         return [d for d in self.decisions if d[0] == "migrate"]
+
+    def handoff_decisions(self) -> List[tuple]:
+        return [d for d in self.decisions if d[0] == "handoff"]

@@ -23,10 +23,12 @@ import numpy as np
 
 from repro.core.session import Session
 from repro.serving.gateway.events import (AudioChunk, BargeIn, Hangup,
-                                          SessionClosed, SpeechEnd,
-                                          SpeechStart, TurnDone,
-                                          TurnRequest, UserAudio)
-from repro.serving.workload import WorkloadConfig, family_prefix, generate
+                                          HandoffRequest, SessionClosed,
+                                          SpeechEnd, SpeechStart,
+                                          ToolCallResult, ToolCallStart,
+                                          TurnDone, TurnRequest, UserAudio)
+from repro.serving.workload import (TOOL_RESUME_GAP_S, WorkloadConfig,
+                                    family_prefix, generate)
 
 
 @dataclass
@@ -50,7 +52,9 @@ async def _drive_session(gateway, clock, s: Session,
     fam = (family_prefix(cfg.workload, s.family, cfg.vocab, cfg.seed)
            if s.family >= 0 and cfg.workload.family_prefix_len > 0
            else None)
+    tool_resume = False
     for ti, turn in enumerate(turns):
+        duplex = turn.frame_period_tokens > 0.0
         prompt = rng.integers(0, cfg.vocab,
                               size=max(1, min(turn.prompt_len,
                                               cfg.max_prompt)))
@@ -61,12 +65,34 @@ async def _drive_session(gateway, clock, s: Session,
         n_tokens = max(2, min(turn.response_tokens, cfg.max_response))
         speech_dur = max(0.05, (turn.speech_end - turn.speech_start)
                          * cfg.speech_scale)
-        await handle.send(SpeechStart(sid, expected_dur_s=speech_dur))
-        await handle.send(UserAudio(sid, dur_s=speech_dur))
-        await clock.sleep(speech_dur)
-        await handle.send(SpeechEnd(sid))
-        await handle.send(TurnRequest(sid, prompt=prompt,
-                                      max_new_tokens=n_tokens))
+        if turn.handoff:
+            # requested while idle (between turns), before this turn's
+            # utterance — the move hides in speech, like a migration
+            await handle.send(HandoffRequest(
+                sid, target=turn.handoff_target))
+        if tool_resume:
+            # tool-pause resume: the tool result IS the turn input —
+            # no new utterance, no SpeechStart/End
+            await handle.send(TurnRequest(sid, prompt=prompt,
+                                          max_new_tokens=n_tokens,
+                                          tool_resume=True))
+        elif duplex:
+            # full duplex: the request fires at speech onset; the user
+            # keeps talking while the model answers, so no duration
+            # estimate and no SpeechEnd gate the turn
+            await handle.send(SpeechStart(sid))
+            await handle.send(UserAudio(sid, dur_s=speech_dur))
+            await handle.send(TurnRequest(
+                sid, prompt=prompt, max_new_tokens=n_tokens,
+                frame_period_s=(turn.frame_period_tokens
+                                * cfg.audio_per_token_s)))
+        else:
+            await handle.send(SpeechStart(sid, expected_dur_s=speech_dur))
+            await handle.send(UserAudio(sid, dur_s=speech_dur))
+            await clock.sleep(speech_dur)
+            await handle.send(SpeechEnd(sid))
+            await handle.send(TurnRequest(sid, prompt=prompt,
+                                          max_new_tokens=n_tokens))
         # barge cut re-anchored to the clamped reply length so short
         # test replies still get cut mid-playback
         cut_s: Optional[float] = None
@@ -117,7 +143,20 @@ async def _drive_session(gateway, clock, s: Session,
                 # completed, but a barge is still scheduled mid-playback:
                 # keep waiting for the deadline
         last = ti == len(turns) - 1
-        if not barged:
+        if duplex and not barged:
+            await handle.send(SpeechEnd(sid))   # utterance over with turn
+        tool_resume = False
+        if turn.tool_call and not barged and not last:
+            # the reply ended in a tool invocation: idle with hot KV for
+            # the tool's latency, then resume after a short result gap
+            await handle.send(ToolCallStart(
+                sid, expected_latency_s=turn.tool_latency_s))
+            await clock.sleep(turn.tool_latency_s)
+            await handle.send(ToolCallResult(
+                sid, resume_gap_s=TOOL_RESUME_GAP_S))
+            await clock.sleep(TOOL_RESUME_GAP_S)
+            tool_resume = True
+        elif not barged:
             # listen to the rest of the reply, think, then speak again
             drain = max(0.0, play_end - clock.now())
             await clock.sleep(drain + (0.0 if last else s.think_time_s))

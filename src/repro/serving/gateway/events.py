@@ -11,6 +11,16 @@ Client -> gateway (interaction signals, paper §3):
                prompt + response budget. Admission from here on is the
                scheduler's call, not the transport's.
   BargeIn      user interrupts playback: abort the in-flight turn
+  ToolCallStart   the turn's reply ended in a tool invocation: the
+               session idles with hot KV while the external tool runs
+               (KV gains tool-pause protection with its own TTL; Eq. 4
+               next-use becomes the tool's expected return)
+  ToolCallResult  the tool returned; the resume turn follows in
+               ``resume_gap_s`` — an evicted session's reload hides in
+               that gap (resume-without-reprefill)
+  HandoffRequest  transfer the session's committed context to a
+               different model config/replica (rides the fleet MIGRATE
+               machinery; single-replica gateways acknowledge and stay)
   Hangup       session over; KV pages are released
 
 Gateway -> client:
@@ -57,11 +67,32 @@ class SpeechEnd(SessionEvent):
 class TurnRequest(SessionEvent):
     prompt: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
     max_new_tokens: int = 0
+    # full duplex: > 0 arms a hard per-frame output deadline of this
+    # many (serving-clock) seconds per token
+    frame_period_s: float = 0.0
+    # this request resumes a tool-call pause (telemetry: its reload
+    # split is the resume-without-reprefill cost)
+    tool_resume: bool = False
 
 
 @dataclass
 class BargeIn(SessionEvent):
     expected_dur_s: Optional[float] = None
+
+
+@dataclass
+class ToolCallStart(SessionEvent):
+    expected_latency_s: float = 0.0
+
+
+@dataclass
+class ToolCallResult(SessionEvent):
+    resume_gap_s: float = 0.0
+
+
+@dataclass
+class HandoffRequest(SessionEvent):
+    target: int = 0                 # requested model config / replica
 
 
 @dataclass

@@ -41,8 +41,10 @@ from repro.core.session import Phase, Request, RequestState
 from repro.kvcache.paged import OutOfPages
 from repro.serving.gateway.clock import ScaledWallClock
 from repro.serving.gateway.events import (AudioChunk, BargeIn, Hangup,
-                                          SessionClosed, SessionEvent,
-                                          SpeechEnd, SpeechStart, TurnDone,
+                                          HandoffRequest, SessionClosed,
+                                          SessionEvent, SpeechEnd,
+                                          SpeechStart, ToolCallResult,
+                                          ToolCallStart, TurnDone,
                                           TurnRequest, UserAudio)
 from repro.serving.metrics import Metrics, TurnRecord
 
@@ -115,6 +117,22 @@ def build_scheduler(policy: str, monitor, kv_occupancy, *, chunk: int,
     return FCFSScheduler(monitor, stage="thinker", prefill_chunk=chunk)
 
 
+def frame_token_tick(monitor, rec, sid: str, now: float) -> None:
+    """Per-emitted-token frame accounting for periodic (full-duplex)
+    sessions — shared by both gateway twins so the deadline-miss
+    counters cannot drift between the live loop and the replay. The
+    deadline walks one period per token from the turn request (hard
+    periodic-task semantics: falling behind accumulates misses, it does
+    not re-anchor the schedule)."""
+    v = monitor.view(sid)
+    if v is None or v.frame_deadline is None:
+        return
+    if now > v.frame_deadline + 1e-9:
+        rec.deadline_misses += 1
+    rec.frames += 1
+    v.frame_deadline += v.frame_period_s
+
+
 def record_admitted_turn(rec, r: Request) -> None:
     """Copy the admission-time reload accounting from the Request onto
     the TurnRecord — the one coupling between the engine's turn stats
@@ -159,9 +177,11 @@ def control_round(eng, scheduler, pending, *, token_budget: int,
         if s.request.phase == Phase.DECODE \
                 and over_frontier(s.session_id):
             continue                         # hard frontier cap (§4)
+        s.request.slot_bound = True
         ready.append(s.request)
         owner[s.request.req_id] = ("slot", i)
     for sid, p in pending.items():
+        p.request.slot_bound = False
         ready.append(p.request)
         owner[p.request.req_id] = ("pending", sid)
     if not ready:
@@ -170,7 +190,8 @@ def control_round(eng, scheduler, pending, *, token_budget: int,
         token_budget=token_budget,
         free_kv_blocks=eng.kv.free_blocks
         + eng.kv.reclaimable_blocks(now),
-        max_batch=eng.slots, block_size=eng.page_size)
+        max_batch=eng.slots, block_size=eng.page_size,
+        free_slots=sum(1 for s in eng.slot_state.values() if s is None))
     decision = scheduler.schedule(ready, budget, now)
     chunks: Dict[int, int] = {}
     admitted = False
@@ -289,6 +310,13 @@ class RealtimeGateway:
             self._on_turn_request(ev)
         elif isinstance(ev, BargeIn):
             self._on_barge_in(ev)
+        elif isinstance(ev, ToolCallStart):
+            self._metrics.tool_pauses += 1
+            eng.tool_call_start(sid, ev.expected_latency_s)
+        elif isinstance(ev, ToolCallResult):
+            eng.tool_call_result(sid, ev.resume_gap_s)
+        elif isinstance(ev, HandoffRequest):
+            self._on_handoff(ev)
         elif isinstance(ev, Hangup):
             self._on_hangup(sid)
 
@@ -309,6 +337,14 @@ class RealtimeGateway:
                                          ev.max_new_tokens, req)
         rec = self._rec(sid)
         rec.speech_end = now
+        if ev.frame_period_s > 0.0:
+            self._eng(sid).monitor.on_frame_turn(sid, ev.frame_period_s)
+        rec.tool_resumed = ev.tool_resume
+
+    def _on_handoff(self, ev: HandoffRequest) -> None:
+        """Single-engine gateway: there is nowhere to move the session;
+        acknowledge-and-stay (the fleet gateway overrides this with a
+        targeted migration)."""
 
     def _slot_of(self, sid: str) -> Optional[int]:
         for i, s in self._eng(sid).slot_state.items():
@@ -402,6 +438,7 @@ class RealtimeGateway:
                     if rec.ttfp is None:
                         rec.ttfp = now - rec.speech_end
                         rec.text_ttft = rec.ttfp
+                    frame_token_tick(eng.monitor, rec, sid, now)
                     eng.monitor.on_audio(sid, apt)
                     rec.audio_delivered_s += apt
                     rec.talker_generated += 1
@@ -457,7 +494,9 @@ class RealtimeGateway:
 
     def _hold_wake(self) -> Optional[float]:
         ld = getattr(self, "last_decision", None)
-        return self.scheduler.hold_wake_s(ld) if ld else None
+        if not ld:
+            return None
+        return self.scheduler.hold_wake_s(ld, self.clock.now())
 
     async def run(self) -> None:
         """Serve until ``stop()`` is called and in-flight work drains."""

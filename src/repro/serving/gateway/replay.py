@@ -33,9 +33,11 @@ from repro.core.scheduler import (FCFSScheduler, SchedulerConfig,
 from repro.core.session import Request, RequestState
 from repro.serving.engine import RoundLimitExceeded
 from repro.serving.gateway.gateway import (control_round,
+                                           frame_token_tick,
                                            record_admitted_turn)
 from repro.serving.metrics import Metrics, TurnRecord
-from repro.serving.workload import WorkloadConfig, family_prefix, generate
+from repro.serving.workload import (TOOL_RESUME_GAP_S, WorkloadConfig,
+                                    family_prefix, generate)
 
 
 class ReplayClock:
@@ -164,7 +166,7 @@ class ReplayGateway:
                         1e-9, turn.response_tokens * apt)
                     cut_s = max(apt, min(frac, 0.9) * n_tokens * apt)
                 lst.append((np.asarray(prompt, np.int32), n_tokens,
-                            speech_dur, cut_s))
+                            speech_dur, cut_s, turn))
             self._turns[s.session_id] = lst
             self._push(s.arrival_time, self._speech_start, s, 0)
 
@@ -184,18 +186,37 @@ class ReplayGateway:
     def _clamped_turn(self, s, ti: int):
         return self._turns[s.session_id][ti]
 
+    def _handoff_request(self, sid: str, target: int) -> None:
+        """Single-engine replay: nowhere to move the session —
+        acknowledge-and-stay (the fleet twin overrides this with a
+        targeted migration, mirroring the fleet gateway)."""
+
     def _speech_start(self, s, ti: int) -> None:
         sid = s.session_id
-        _, _, speech_dur, _ = self._clamped_turn(s, ti)
-        self._eng(sid).user_speech_start(sid, expected_dur_s=speech_dur)
-        self._push(self.clock.now() + speech_dur, self._turn_request,
-                   s, ti)
+        _, _, speech_dur, _, turn = self._clamped_turn(s, ti)
+        if turn.handoff:
+            self._handoff_request(sid, turn.handoff_target)
+        if turn.frame_period_tokens > 0.0:
+            # full duplex: the request fires at speech onset, with no
+            # duration estimate and no SpeechEnd gate (client.py mirror)
+            self._eng(sid).user_speech_start(sid)
+            self._push(self.clock.now(), self._turn_request, s, ti)
+        else:
+            self._eng(sid).user_speech_start(sid,
+                                             expected_dur_s=speech_dur)
+            self._push(self.clock.now() + speech_dur, self._turn_request,
+                       s, ti)
 
-    def _turn_request(self, s, ti: int) -> None:
+    def _turn_request(self, s, ti: int, resume: bool = False) -> None:
         sid = s.session_id
-        prompt, n_tokens, _, _ = self._clamped_turn(s, ti)
+        prompt, n_tokens, _, _, turn = self._clamped_turn(s, ti)
         eng = self._eng(sid)
-        eng.monitor.on_speech_end(sid)
+        duplex = turn.frame_period_tokens > 0.0
+        if not duplex and not resume:
+            # the client sends SpeechEnd just before TurnRequest only on
+            # the half-duplex speech path (no utterance gates a duplex
+            # or tool-resume turn)
+            eng.monitor.on_speech_end(sid)
         self._turn_no[sid] = ti
         now = self.clock.now()
         sess = eng.sessions.get(sid)
@@ -206,7 +227,12 @@ class ReplayGateway:
                       audio_per_token_s=self.cfg.audio_per_token_s)
         self._pending[sid] = _Pending(sid, np.asarray(prompt, np.int32),
                                       n_tokens, req)
-        self._rec(sid).speech_end = now
+        rec = self._rec(sid)
+        rec.speech_end = now
+        if duplex:
+            eng.monitor.on_frame_turn(
+                sid, turn.frame_period_tokens * self.cfg.audio_per_token_s)
+        rec.tool_resumed = resume
 
     def _barge(self, s, ti: int) -> None:
         """The trace's cut point (anchored post-TTFP, like client.py):
@@ -242,11 +268,37 @@ class ReplayGateway:
 
     def _turn_done(self, s, ti: int) -> None:
         sid = s.session_id
+        eng = self._eng(sid)
         now = self.clock.now()
-        v = self._eng(sid).monitor.view(sid)
+        turn = self._clamped_turn(s, ti)[4]
+        if turn.frame_period_tokens > 0.0:
+            # full-duplex utterance closes with the turn (client.py
+            # sends its SpeechEnd on TurnDone)
+            eng.monitor.on_speech_end(sid)
+        if turn.tool_call and ti + 1 < len(self._turns[sid]):
+            self._tool_pause(s, ti)
+            return
+        v = eng.monitor.view(sid)
         drain = v.playback.buffer_s(now) if v else 0.0
         self._next_or_hangup(s, ti,
                              at=now + drain + (s.think_time_s or 0.0))
+
+    def _tool_pause(self, s, ti: int) -> None:
+        """The reply ended in a tool call: idle with hot KV for the
+        tool's latency, then resume without a new utterance — the
+        synchronous mirror of client.py's ToolCallStart/Result flow."""
+        sid = s.session_id
+        turn = self._clamped_turn(s, ti)[4]
+        self.metrics.tool_pauses += 1
+        self._eng(sid).tool_call_start(sid, turn.tool_latency_s)
+        self._push(self.clock.now() + turn.tool_latency_s,
+                   self._tool_result, s, ti)
+
+    def _tool_result(self, s, ti: int) -> None:
+        sid = s.session_id
+        self._eng(sid).tool_call_result(sid, TOOL_RESUME_GAP_S)
+        self._push(self.clock.now() + TOOL_RESUME_GAP_S,
+                   self._turn_request, s, ti + 1, True)
 
     def _next_or_hangup(self, s, ti: int, *, at: float) -> None:
         nxt = ti + 1
@@ -311,6 +363,7 @@ class ReplayGateway:
                     if first:
                         rec.ttfp = now - rec.speech_end
                         rec.text_ttft = rec.ttfp
+                    frame_token_tick(eng.monitor, rec, sid, now)
                     eng.monitor.on_audio(sid, apt)
                     rec.audio_delivered_s += apt
                     rec.talker_generated += 1
@@ -321,7 +374,7 @@ class ReplayGateway:
                             buf - self.cfg.frontier_cap_s)
                     if first:
                         # the trace's barge cut anchors at first audio
-                        _, _, _, cut_s = self._clamped_turn(s, ti)
+                        cut_s = self._clamped_turn(s, ti)[3]
                         if cut_s is not None:
                             self._push(now + cut_s, self._barge, s, ti)
                 elif kind == "finished":
@@ -333,7 +386,7 @@ class ReplayGateway:
                         - (rec.ttfp or 0.0)
                     rec.completed = True
                     rec.finish_time = now
-                    _, _, _, cut_s = self._clamped_turn(s, ti)
+                    cut_s = self._clamped_turn(s, ti)[3]
                     if cut_s is None:
                         self._turn_done(s, ti)
                     # else: the scheduled barge advances the session

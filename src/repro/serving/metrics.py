@@ -39,6 +39,13 @@ class TurnRecord:
     finish_time: float = 0.0
     migrated: bool = False                 # turn started on a replica the
     #                                        session was live-migrated to
+    # full-duplex frame accounting (zero on half-duplex turns)
+    frames: int = 0                        # output frames emitted
+    deadline_misses: int = 0               # frames past their deadline
+    # agentic scenario markers
+    tool_resumed: bool = False             # turn resumed a tool pause
+    handoff: bool = False                  # turn started on a replica the
+    #                                        client requested via handoff
 
     @property
     def continuous(self) -> bool:
@@ -69,6 +76,9 @@ class Metrics:
     # KV wire-format fields (DESIGN.md §14) — zero on fp32 planes
     kv_wire_bytes_saved: float = 0.0       # logical minus wire bytes moved
     quant_token_flip_rate: float = 0.0     # quality-gate flip rate, if run
+    # scenario-suite fields (DESIGN.md §15) — zero on plain workloads
+    tool_pauses: int = 0                   # ToolCallStart events observed
+    handoffs: int = 0                      # completed client-requested moves
 
     def ttfps(self):
         return sorted(t.ttfp for t in self.turns if t.ttfp is not None)
@@ -122,6 +132,33 @@ class Metrics:
             return 0.0
         return self.migration_off_path_s / tot
 
+    def deadline_miss_rate(self) -> float:
+        """Fraction of full-duplex output frames emitted past their
+        per-frame deadline — the periodic-real-time analogue of TTFP.
+        Same 0.0-not-NaN convention as ``reload_overlap_frac``."""
+        frames = sum(t.frames for t in self.turns)
+        if frames <= 0:
+            return 0.0
+        return sum(t.deadline_misses for t in self.turns) / frames
+
+    def tool_pause_reloads(self) -> int:
+        """Resume turns that had to move KV at all (evicted during the
+        tool pause) — each is a resume-without-reprefill the protection
+        state failed to make free."""
+        return sum(1 for t in self.turns if t.tool_resumed
+                   and t.reload_stall_s + t.reload_off_path_s > 0.0)
+
+    def tool_resume_off_path(self) -> float:
+        """Of the reload seconds spent resuming tool pauses, the share
+        hidden in the tool-result gap (off the resume turn's critical
+        path). Same 0.0-not-NaN convention as above."""
+        on = sum(t.reload_stall_s for t in self.turns if t.tool_resumed)
+        off = sum(t.reload_off_path_s for t in self.turns
+                  if t.tool_resumed)
+        if on + off <= 0.0:
+            return 0.0
+        return off / (on + off)
+
     def prefix_hit_frac(self) -> float:
         """Fraction of all prompt tokens served by attaching to the
         shared prefix cache instead of prefilling. Same 0.0-not-NaN
@@ -163,4 +200,10 @@ class Metrics:
             "pages_shared": self.pages_shared,
             "kv_wire_bytes_saved": self.kv_wire_bytes_saved,
             "quant_token_flip_rate": self.quant_token_flip_rate,
+            "deadline_miss_rate": self.deadline_miss_rate(),
+            "frames": sum(t.frames for t in self.turns),
+            "tool_pauses": self.tool_pauses,
+            "tool_pause_reloads": self.tool_pause_reloads(),
+            "tool_resume_off_path": self.tool_resume_off_path(),
+            "handoffs": self.handoffs,
         }

@@ -968,6 +968,29 @@ class PagedRealtimeEngine:
                 self.clock.now() + expected_dur_s
         return self.preloader.on_speech_start(session_id, self.clock.now())
 
+    def tool_call_start(self, session_id: str,
+                        expected_latency_s: float = 0.0) -> None:
+        """The turn's reply ended in a tool invocation: the session goes
+        idle mid-conversation with hot KV. Protect it under the
+        tool-pause TTL and point Eq. 4 next-use at the tool's expected
+        return instead of the reply-gap EMA."""
+        now = self.clock.now()
+        self.monitor.on_tool_call_start(session_id, expected_latency_s)
+        self.kv.protect_tool(session_id, now, expected_latency_s)
+        self.kv.refresh_session(session_id, now)
+
+    def tool_call_result(self, session_id: str,
+                         resume_gap_s: float = 0.0):
+        """The tool returned; the resume turn arrives in ~resume_gap_s.
+        Lift the tool-pause protection and fire the ordinary speech-time
+        preload machinery over the gap, so a session whose pages were
+        evicted anyway (TTL lapse, pool pressure) reloads off-path and
+        resumes without re-prefill."""
+        now = self.clock.now()
+        self.monitor.on_tool_call_result(session_id, resume_gap_s)
+        self.kv.clear_tool_protection(session_id, now)
+        return self.preloader.on_speech_start(session_id, now)
+
     def end_session(self, session_id: str) -> None:
         """User hung up: free the session's pages (HBM and DRAM copies)
         and its accounting. History/turn stats stay readable."""

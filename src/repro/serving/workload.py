@@ -6,6 +6,15 @@
   context (retained interaction traces of the paper).
 - mixed: interactive sessions + video events with large prefill
   (StreamingBench-like media turns).
+- duplex: full-duplex periodic-frame sessions (Moshi/MiniCPM-o-like) —
+  the turn request fires the instant speech starts and every output
+  token carries a hard per-frame deadline (``frame_period_tokens``
+  output-token durations per frame); no idle speech window exists.
+- toolcall: agentic sessions whose turns may end in a tool call — the
+  session idles with hot KV for ``tool_latency_s`` while the external
+  tool runs, then resumes without a new utterance.
+- handoff: multi-turn sessions that request a transfer to a different
+  model config/replica between turns (rides the fleet MIGRATE path).
 
 Arrivals: closed-loop concurrency bound c (the paper's frontier sweeps),
 open-loop Poisson, and BurstGPT-like bursty arrivals (Gamma-modulated
@@ -22,10 +31,16 @@ import numpy as np
 
 from repro.core.session import Session, Turn
 
+# gap between a ToolCallResult and the resume TurnRequest — part of the
+# trace's interpretation, so both the live client and the replay twin
+# must read the same constant (the preload window a resume hides in)
+TOOL_RESUME_GAP_S = 0.6
+
 
 @dataclass
 class WorkloadConfig:
-    kind: str = "sharegpt"           # sharegpt | interactive | mixed
+    kind: str = "sharegpt"           # sharegpt | interactive | mixed |
+    #                                  duplex | toolcall | handoff
     num_sessions: int = 32
     p_barge_in: float = 0.0
     seed: int = 0
@@ -57,28 +72,101 @@ def _make_turns(rng, cfg: WorkloadConfig, kind: str) -> List[Turn]:
         n_turns = 1
     elif kind == "interactive":
         n_turns = int(rng.integers(3, 8))
+    elif kind == "duplex":
+        n_turns = int(rng.integers(1, 4))
+    elif kind == "toolcall":
+        n_turns = int(rng.integers(3, 6))
+    elif kind == "handoff":
+        n_turns = int(rng.integers(2, 5))
     else:  # mixed: interactive with a chance of a video-heavy turn
         n_turns = int(rng.integers(2, 6))
     for i in range(n_turns):
+        frame_period = 0.0
+        tool_call, tool_latency = False, 0.0
+        handoff, handoff_target = False, 0
         if kind == "sharegpt":
             prompt = int(_lognormal(rng, 600, 0.8, 40, 6000))
             resp_audio_s = _lognormal(rng, 22, 0.7, 3, 90)
         elif kind == "interactive":
             prompt = int(_lognormal(rng, 120, 0.6, 20, 1200))
             resp_audio_s = _lognormal(rng, 12, 0.6, 2, 60)
+        elif kind == "duplex":
+            # full duplex: the request fires at speech start, frames tick
+            # from the first output token — short prompts, no barge-in
+            # (the user never yields the channel in the first place)
+            prompt = int(_lognormal(rng, 40, 0.4, 8, 200))
+            resp_audio_s = _lognormal(rng, 8, 0.5, 2, 30)
+            frame_period = float(rng.uniform(2.0, 4.0))
+        elif kind == "toolcall":
+            prompt = int(_lognormal(rng, 120, 0.6, 20, 1200))
+            resp_audio_s = _lognormal(rng, 10, 0.6, 2, 50)
+            if i + 1 < n_turns:
+                tool_call = rng.random() < 0.6
+                tool_latency = _lognormal(rng, 2.5, 0.4, 0.8, 8.0)
+                if not tool_call:
+                    tool_latency = 0.0
+        elif kind == "handoff":
+            prompt = int(_lognormal(rng, 120, 0.6, 20, 1200))
+            resp_audio_s = _lognormal(rng, 10, 0.6, 2, 50)
+            if i >= 1:
+                handoff = rng.random() < 0.5
+                handoff_target = int(rng.integers(0, 8))
+                if not handoff:
+                    handoff_target = 0
         else:
             video = rng.random() < 0.35
             prompt = int(_lognormal(rng, 4000 if video else 150, 0.5,
                                     30, 10000))
             resp_audio_s = _lognormal(rng, 15, 0.6, 2, 70)
         resp_tokens = max(8, int(resp_audio_s / cfg.audio_per_token_s))
-        barge = rng.random() < cfg.p_barge_in
+        barge = (rng.random() < cfg.p_barge_in) and kind != "duplex"
         cut = float(rng.uniform(0.15, 0.75)) * resp_audio_s if barge else 0.0
         speech_dur = _lognormal(rng, 2.5, 0.5, 0.6, 8.0)
         turns.append(Turn(index=i, speech_start=0.0, speech_end=speech_dur,
                           prompt_len=prompt, response_tokens=resp_tokens,
-                          barge_in=barge, barge_cut_s=cut))
+                          barge_in=barge, barge_cut_s=cut,
+                          frame_period_tokens=frame_period,
+                          tool_call=tool_call, tool_latency_s=tool_latency,
+                          handoff=handoff, handoff_target=handoff_target))
     return turns
+
+
+def _burst_wave(cfg: WorkloadConfig):
+    """The burstgpt square wave as (duty, peak_rate, off_rate), derived
+    so the time-averaged rate is exactly ``rate_rps`` (burst_factor is
+    the documented peak/mean ratio). The nominal burst duty is 0.3 of
+    the period; for burst_factor > 1/0.3 that would need a negative
+    off-phase rate, so the duty shrinks to 1/burst_factor and the off
+    phase goes silent instead."""
+    bf = max(1.0, cfg.burst_factor)
+    duty = min(0.3, 1.0 / bf)
+    peak = cfg.rate_rps * bf
+    off = cfg.rate_rps * max(0.0, 1.0 - duty * bf) / (1.0 - duty) \
+        if duty < 1.0 else 0.0
+    return duty, peak, off
+
+
+def _next_burst_arrival(rng, cfg: WorkloadConfig, t: float) -> float:
+    """Next arrival of the square-wave-modulated Poisson process after
+    ``t``: draw a unit-mean exponential hazard target and integrate the
+    piecewise-constant rate forward until it is met. Exact for any
+    duty/peak/off triple, including a silent off phase."""
+    duty, peak, off = _burst_wave(cfg)
+    period = cfg.burst_period_s
+    need = rng.exponential(1.0)
+    while need > 1e-12:
+        start = t - (t % period)
+        in_burst = (t - start) < duty * period
+        rate = peak if in_burst else off
+        seg_end = start + (duty * period if in_burst else period)
+        if rate <= 0.0:
+            t = seg_end
+            continue
+        if need <= (seg_end - t) * rate:
+            return t + need / rate
+        need -= (seg_end - t) * rate
+        t = seg_end
+    return t
 
 
 def _arrival_times(rng, cfg: WorkloadConfig) -> List[float]:
@@ -90,12 +178,8 @@ def _arrival_times(rng, cfg: WorkloadConfig) -> List[float]:
     for i in range(cfg.num_sessions):
         if cfg.arrival == "poisson":
             t += rng.exponential(1.0 / cfg.rate_rps)
-        else:  # burstgpt-like: rate modulated by a square burst wave
-            phase = (t % cfg.burst_period_s) / cfg.burst_period_s
-            rate = cfg.rate_rps * (cfg.burst_factor if phase < 0.3
-                                   else max(0.1, (1 - 0.3 * cfg.burst_factor)
-                                            / 0.7))
-            t += rng.exponential(1.0 / max(rate, 1e-3))
+        else:  # burstgpt-like: mean-conserving square-wave modulation
+            t = _next_burst_arrival(rng, cfg, t)
         times.append(t)
     return times
 
