@@ -139,6 +139,31 @@ def run(quick: bool = False) -> dict:
         f"p90_ttfp_us={fmt(s['p90_ttfp'] * 1e6, 1)};"
         f"continuity={fmt(s['continuity'], 2)}")
 
+    # the same duplex trace under speculative decode (DESIGN.md §16),
+    # identical geometry — the only delta is spec_decode=4 (the round
+    # budget clamps decode grants, so drafts ride inside the same
+    # budget): drafts verify in the same launch, so per-frame deadlines
+    # can only gain slack — the row pins miss-with-spec <= non-spec
+    gw = build_gateway(policy="liveserve", scale=4.0, model=model,
+                       frontier_cap_s=3.0, round_token_budget=4,
+                       pages_per_seq=10, audio_per_token_s=apt,
+                       spec_decode=4)
+    m, gw = run_gateway_workload(
+        policy="liveserve", kind="duplex", sessions=3 if quick else 4,
+        barge_in=0.0, seed=6, rate_rps=4.0, max_prompt=12,
+        max_response=max_response, gateway=gw, timeout_s=600)
+    ss = m.summary()
+    out["duplex_spec"] = ss
+    row("gateway/duplex_deadline_miss_spec",
+        ss["deadline_miss_rate"] * 100.0,
+        f"nonspec_miss={fmt(s['deadline_miss_rate'] * 100.0)};"
+        f"frames={ss['frames']};turns={ss['turns']};"
+        f"accept_rate={fmt(ss['spec_accept_rate'], 2)}")
+    row("gateway/spec_tokens_per_launch",
+        ss["spec_tokens_per_launch"],
+        f"drafted={ss['spec_drafted']};accepted={ss['spec_accepted']};"
+        f"rejected={ss['spec_rejected']};k=4")
+
     # agentic tool-call pauses: the session idles with hot KV while the
     # external tool runs. Protection covers min(tool latency, TTL); the
     # bench shrinks the TTL below the trace's 0.8-8s tool latencies so

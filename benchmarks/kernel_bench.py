@@ -14,7 +14,8 @@ import numpy as np
 from benchmarks.common import fmt, row
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_prefill_attention)
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -61,6 +62,25 @@ def run(quick=False):
                q, kp, vp, bt, sl)
     out.append(row("kernel/paged_attention", us,
                    f"maxerr={err:.2e};kv_bytes={kp.nbytes * 2}"))
+
+    # fused paged prefill/verify: tokens/s vs Q bucket (the shape the
+    # fused round and the speculative verify step launch — autotune's
+    # target; DESIGN.md §16)
+    for Q in (1, 4) if quick else (1, 4, 8):
+        kq = jax.random.split(jax.random.PRNGKey(Q), 2)
+        qq = jax.random.normal(kq[0], (B, Q, Hq, D))
+        q_lens = jnp.full((B,), Q, jnp.int32)
+        q_start = sl - Q
+        got = paged_prefill_attention(qq, kp, vp, bt, q_start, q_lens,
+                                      interpret=True)
+        want = ref.paged_prefill_attention_ref(qq, kp, vp, bt, q_start,
+                                               q_lens)
+        err = float(jnp.max(jnp.abs(got - want)))
+        us = _time(jax.jit(lambda *a: ref.paged_prefill_attention_ref(*a)),
+                   qq, kp, vp, bt, q_start, q_lens)
+        out.append(row(
+            f"kernel/paged_prefill_attention/q{Q}", us,
+            f"maxerr={err:.2e};tokens_s={fmt(B * Q / (us / 1e6))}"))
 
     # ssd scan
     b, l, h, p, n = 1, 512, 4, 64, 128

@@ -1,7 +1,12 @@
 """§Roofline table: reads experiments/dryrun/*.json (produced by
-``python -m repro.launch.dryrun``) and prints per-cell roofline terms."""
+``python -m repro.launch.dryrun``) and prints per-cell roofline terms.
+
+Runnable directly: ``python -m benchmarks.roofline_report
+[--out-dir DIR]`` prints the same CSV rows the bench driver collects.
+"""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -38,6 +43,24 @@ def run(quick=False, out_dir="experiments/dryrun"):
             f";useful={fmt(uf) if uf else 'n/a'}"
             f";peak_gb={c['memory_analysis'].get('peak_memory_in_bytes', 0)/1e9:.1f}"))
     if not out:
-        out.append(row("roofline/none", 0.0,
-                       "run python -m repro.launch.dryrun first"))
+        # actionable instead of silent: say whether the dir is missing
+        # or merely has no cell JSONs, and what produces them
+        state = ("no such dir" if not os.path.isdir(out_dir)
+                 else "dir has no *.json cells")
+        out.append(row(
+            "roofline/none", 0.0,
+            f"{state}:{out_dir};run python -m repro.launch.dryrun first"))
     return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="experiments/dryrun",
+                    help="dryrun cell directory to report on")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(out_dir=args.out_dir)          # row() prints each line
+
+
+if __name__ == "__main__":
+    main()

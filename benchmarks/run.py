@@ -28,8 +28,8 @@ def main() -> None:
                     help="write all rows + timings to this JSON file")
     args = ap.parse_args()
 
-    from benchmarks import common, eviction_index, gateway_bench, \
-        kernel_bench, paged_engine_bench, roofline_report
+    from benchmarks import autotune_bench, common, eviction_index, \
+        gateway_bench, kernel_bench, paged_engine_bench, roofline_report
     from benchmarks import serving_suite as S
 
     benches = {
@@ -48,6 +48,7 @@ def main() -> None:
         "paged_engine": paged_engine_bench.run,      # real data plane
         "gateway": gateway_bench.run,                # DESIGN.md §4
         "kernels": kernel_bench.run,
+        "autotune": autotune_bench.run,              # DESIGN.md §16
         "roofline": roofline_report.run,             # §Roofline
     }
     only = set(args.only.split(",")) if args.only else None

@@ -59,7 +59,10 @@ class RoundBudget:
         crosses a block boundary — charging one per token would let a
         full pool of live sessions starve decode that needs no growth."""
         if req.phase == Phase.DECODE:
-            return 1 if req.total_context % self.block_size == 0 else 0
+            # blocks newly crossed by growing tc -> tc + chunk (chunk==1
+            # reduces to the old boundary test: 1 iff tc % bs == 0)
+            tc, bs = req.total_context, self.block_size
+            return (tc + chunk + bs - 1) // bs - (tc + bs - 1) // bs
         return -(-chunk // self.block_size)
 
     def fits(self, req: Request, chunk: int) -> bool:
@@ -92,7 +95,8 @@ class UrgencyScheduler:
                  buffer_estimator: Optional[Callable] = None,
                  kv_occupancy: Optional[Callable] = None,
                  kv_of_request: Optional[Callable] = None,
-                 prefill_chunk: int = 512):
+                 prefill_chunk: int = 512,
+                 decode_chunk: int = 1):
         self.cfg = cfg
         self.monitor = monitor
         self.stage = stage
@@ -100,6 +104,11 @@ class UrgencyScheduler:
         self._kv_occ = kv_occupancy or (lambda: 0.0)
         self._kv_of = kv_of_request or (lambda r: float(r.total_context))
         self.prefill_chunk = prefill_chunk
+        # decode grant per round: 1 + draft budget under speculative
+        # decode (DESIGN.md §16). Callers must clamp this to the round
+        # token budget — a grant the budget can never fit would stall
+        # at Algorithm 1's admission break every round (head-of-line)
+        self.decode_chunk = decode_chunk
 
     # ------------------------------------------------------------ signals
     def _default_buffer(self, req: Request) -> Optional[float]:
@@ -148,7 +157,10 @@ class UrgencyScheduler:
     def chunk_for(self, req: Request) -> int:
         if req.phase == Phase.PREFILL and not req.done_prefill:
             return min(self.prefill_chunk, req.prompt_len - req.prefilled)
-        return 1                      # decode: one token per round
+        # decode: pending token + up to decode_chunk-1 draft tokens,
+        # never past the turn's remaining generation budget
+        return max(1, min(self.decode_chunk,
+                          req.max_new_tokens - req.generated))
 
     def schedule(self, ready: List[Request], budget: RoundBudget,
                  now: float) -> ScheduleDecision:

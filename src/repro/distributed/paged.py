@@ -340,3 +340,25 @@ def make_sharded_fused_step(cfg, layout: PagedKVLayout, *,
         out_specs=(rep, spec, spec),
         check_vma=False)
     return jax.jit(f)
+
+
+def make_sharded_spec_step(cfg, layout: PagedKVLayout, *,
+                           interpret: bool = False):
+    """The sharded twin of the speculative fused round (DESIGN.md §16):
+    ``paged_fused_step(..., spec=True)`` under the same shard_map as
+    ``make_sharded_fused_step``, with the extra replicated per-position
+    argmax output ``outs [B, Q]``. The verify math is the identical
+    fused body — only the logits slice/argmax tail differs — so the
+    no-drift argument carries over unchanged."""
+    from repro.serving.paged_engine import paged_fused_step
+
+    body = functools.partial(paged_fused_step, cfg, interpret=interpret,
+                             plane=layout, spec=True)
+    spec = layout.page_pspec(with_layers=True)
+    rep = P()
+    f = shard_map(
+        body, mesh=layout.mesh,
+        in_specs=(rep, rep, rep, spec, spec, rep, rep, rep, rep, rep),
+        out_specs=(rep, rep, spec, spec),
+        check_vma=False)
+    return jax.jit(f)

@@ -3,23 +3,25 @@
 One query token per sequence attends over a paged KV cache addressed
 through per-sequence block tables. This is the TPU-native re-think of
 vLLM-style CUDA paged attention (DESIGN.md §3): instead of warp-level
-gather, each grid step DMAs one KV page HBM→VMEM, selected by a
+gather, each grid step DMAs one KV tile HBM→VMEM, selected by a
 scalar-prefetched block table (``PrefetchScalarGridSpec``), and folds it
 into an online-softmax accumulator. Pages are contiguous [page, Hkv, D]
 tiles so the MXU sees aligned [page, D] operands; G query heads of a KV
 head are processed together as a [G, D] tile.
 
-Grid: (B, Hkv, pages_per_seq) — pages innermost, accumulator in VMEM.
+Grid: (B, Hkv, pages_per_seq * page/kv_block) — KV tiles innermost,
+accumulator in VMEM.
 
 ``paged_prefill_attention`` is the fused-round variant (DESIGN.md §11):
 each batch row carries a *chunk* of Q consecutive query tokens (a
-prefill chunk, or Q=1 for a decode slot) whose KV was scattered into the
-pages before the call, with per-row ``q_start``/``q_lens`` scalars.
-Causal masking covers both the committed history and the intra-chunk
-positions — query token t of a row attends to global positions
-``<= q_start + t`` — and each of the Q*G query rows keeps its own
-online-softmax accumulator, so one launch serves an entire mixed
-prefill+decode token budget.
+prefill chunk, a speculative draft window, or Q=1 for a decode slot)
+whose KV was scattered into the pages before the call, with per-row
+``q_start``/``q_lens`` scalars. Causal masking covers both the committed
+history and the intra-chunk positions — query token t of a row attends
+to global positions ``<= q_start + t`` — and each of the Q*G query rows
+keeps its own online-softmax accumulator, so one launch serves an entire
+mixed prefill+decode token budget (and the spec-decode verify step,
+DESIGN.md §16, which is exactly this shape).
 
 Both kernels also run as one *shard* of a tensor-sharded page store
 (DESIGN.md §9): when the 'model' mesh axis splits each page's token
@@ -31,6 +33,17 @@ emits the online-softmax running max ``m`` and denominator ``l`` per
 (batch[, q-token], q-head) so the caller can combine partial softmaxes
 across shards (the standard flash-merge: weight each shard's normalized
 output by ``l_s * exp(m_s - max_s m_s)``).
+
+Tiling knobs (DESIGN.md §16): ``kv_block`` splits each page into
+``page / kv_block`` grid steps (smaller VMEM tiles, more steps —
+arithmetic-identical at any legal value, because the online softmax
+folds tiles in the same position order); ``head_block`` caps the KV
+heads per launch, splitting the head axis across multiple
+``pallas_call``s whose outputs concatenate (exact, by per-head softmax
+independence). Both default to a static heuristic and are overridden
+per (shape, backend) by the autotune cache when
+``repro.kernels.autotune.enable()`` has loaded one — callers that pass
+explicit values bypass the cache entirely.
 """
 from __future__ import annotations
 
@@ -45,8 +58,36 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
+def _default_kv_block(page: int) -> int:
+    """Static tile heuristic: whole-page tiles up to the 16-slot lane
+    tile; larger 16-divisible pages default to 16-slot sub-tiles (the
+    TPU lane width) — the autotune sweep overrides per shape."""
+    return page if (page <= 16 or page % 16 != 0) else 16
+
+
+def _resolve(kind: str, kv_block, head_block, *, page: int, Hkv: int,
+             dims: dict) -> tuple:
+    """Fill unset tiling knobs from the autotune cache (a no-op unless
+    ``autotune.enable()`` loaded one), else the static defaults."""
+    if kv_block is None or head_block is None:
+        from repro.kernels import autotune
+        tuned = autotune.lookup(kind, autotune.shape_key(**dims))
+        if tuned is not None:
+            if kv_block is None:
+                kv_block = tuned.get("kv_block")
+            if head_block is None:
+                head_block = tuned.get("head_block")
+    if kv_block is None:
+        kv_block = _default_kv_block(page)
+    if head_block is None:
+        head_block = Hkv
+    assert page % kv_block == 0, (page, kv_block)
+    assert Hkv % head_block == 0, (Hkv, head_block)
+    return kv_block, head_block
+
+
 def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, *refs,
-            page: int, pages_per_seq: int, scale: float,
+            kv_block: int, bpp: int, total_steps: int, scale: float,
             pos_stride: int, pos_offset: int, stats: bool):
     if stats:
         o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref = refs
@@ -62,13 +103,13 @@ def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, *refs,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     seq_len = seq_lens[b]
-    base = p * pos_stride + pos_offset
+    base = (p // bpp) * pos_stride + (p % bpp) * kv_block + pos_offset
 
     @pl.when(base < seq_len)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)              # [G, D]
-        k = k_ref[0, :, 0].astype(jnp.float32)           # [page, D]
-        v = v_ref[0, :, 0].astype(jnp.float32)           # [page, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)           # [kv_block, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)           # [kv_block, D]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(pos < seq_len, s, NEG_INF)
@@ -80,7 +121,7 @@ def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, *refs,
         acc_ref[...] = acc_ref[...] * alpha[:, None] + pexp @ v
         m_ref[...] = m_new
 
-    @pl.when(p == pages_per_seq - 1)
+    @pl.when(p == total_steps - 1)
     def _finalize():
         denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
@@ -91,7 +132,9 @@ def _kernel(block_tables, seq_lens, q_ref, k_ref, v_ref, *refs,
 
 def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
                     pos_stride: int | None = None, pos_offset: int = 0,
-                    return_stats: bool = False, interpret: bool = False):
+                    return_stats: bool = False, interpret: bool = False,
+                    kv_block: int | None = None,
+                    head_block: int | None = None):
     """q [B, Hq, D]; k_pages/v_pages [P, page, Hkv, D];
     block_tables [B, pages_per_seq] i32; seq_lens [B] i32 -> [B, Hq, D].
 
@@ -103,6 +146,11 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
     per-row online-softmax running max and denominator over this call's
     positions (``m = -inf``, ``l = 0`` for rows/shards with no valid
     position), enabling an exact cross-shard softmax merge.
+
+    ``kv_block`` (divides ``page``) sizes the per-grid-step KV tile;
+    ``head_block`` (divides ``Hkv``) splits the launch over the KV-head
+    axis. Unset knobs come from the autotune cache when enabled, else
+    static defaults. Any legal values are output-identical.
     """
     B, Hq, D = q.shape
     num_pages, page, Hkv, _ = k_pages.shape
@@ -110,9 +158,31 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
     pages_per_seq = block_tables.shape[1]
     if pos_stride is None:
         pos_stride = page
-    grid = (B, Hkv, pages_per_seq)
+    kv_block, head_block = _resolve(
+        "paged_attention", kv_block, head_block, page=page, Hkv=Hkv,
+        dims=dict(B=B, Hq=Hq, Hkv=Hkv, D=D, page=page,
+                  pps=pages_per_seq))
+    if head_block < Hkv:
+        # split the KV-head axis into independent launches; exact
+        # because each head's softmax never mixes with another's
+        parts = [paged_attention(
+            q[:, h0 * G:(h0 + head_block) * G],
+            k_pages[:, :, h0:h0 + head_block],
+            v_pages[:, :, h0:h0 + head_block],
+            block_tables, seq_lens, pos_stride=pos_stride,
+            pos_offset=pos_offset, return_stats=return_stats,
+            interpret=interpret, kv_block=kv_block,
+            head_block=head_block)
+            for h0 in range(0, Hkv, head_block)]
+        if return_stats:
+            return tuple(jnp.concatenate([p[i] for p in parts], axis=1)
+                         for i in range(3))
+        return jnp.concatenate(parts, axis=1)
+    bpp = page // kv_block
+    total_steps = pages_per_seq * bpp
+    grid = (B, Hkv, total_steps)
     kernel = functools.partial(
-        _kernel, page=page, pages_per_seq=pages_per_seq,
+        _kernel, kv_block=kv_block, bpp=bpp, total_steps=total_steps,
         scale=1.0 / math.sqrt(D), pos_stride=pos_stride,
         pos_offset=pos_offset, stats=return_stats)
     qg = q.reshape(B, Hkv, G, D)
@@ -131,10 +201,12 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
         in_specs=[
             pl.BlockSpec((1, 1, G, D),
                          lambda b, h, p, bt, sl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, p, bt, sl: (bt[b, p], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, p, bt, sl: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, kv_block, 1, D),
+                         lambda b, h, p, bt, sl:
+                         (bt[b, p // bpp], p % bpp, h, 0)),
+            pl.BlockSpec((1, kv_block, 1, D),
+                         lambda b, h, p, bt, sl:
+                         (bt[b, p // bpp], p % bpp, h, 0)),
         ],
         out_specs=out_specs,
         scratch_shapes=[
@@ -159,9 +231,9 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
 # fused multi-token queries (one launch per round — DESIGN.md §11)
 # ======================================================================
 def _fused_kernel(block_tables, q_start, q_lens, q_ref, k_ref, v_ref,
-                  *refs, page: int, pages_per_seq: int, scale: float,
-                  pos_stride: int, pos_offset: int, stats: bool,
-                  Q: int, G: int):
+                  *refs, kv_block: int, bpp: int, total_steps: int,
+                  scale: float, pos_stride: int, pos_offset: int,
+                  stats: bool, Q: int, G: int):
     if stats:
         o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref = refs
     else:
@@ -178,13 +250,13 @@ def _fused_kernel(block_tables, q_start, q_lens, q_ref, k_ref, v_ref,
     start = q_start[b]
     nq = q_lens[b]
     seq_len = start + nq                 # post-write attention length
-    base = p * pos_stride + pos_offset
+    base = (p // bpp) * pos_stride + (p % bpp) * kv_block + pos_offset
 
     @pl.when(base < seq_len)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)              # [G*Q, D]
-        k = k_ref[0, :, 0].astype(jnp.float32)           # [page, D]
-        v = v_ref[0, :, 0].astype(jnp.float32)           # [page, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)           # [kv_block, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)           # [kv_block, D]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         kv_pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         # query rows are (g, t) pairs, t minor: row r is token r % Q
@@ -199,7 +271,7 @@ def _fused_kernel(block_tables, q_start, q_lens, q_ref, k_ref, v_ref,
         acc_ref[...] = acc_ref[...] * alpha[:, None] + pexp @ v
         m_ref[...] = m_new
 
-    @pl.when(p == pages_per_seq - 1)
+    @pl.when(p == total_steps - 1)
     def _finalize():
         denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
@@ -212,7 +284,9 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, q_start,
                             q_lens, *, pos_stride: int | None = None,
                             pos_offset: int = 0,
                             return_stats: bool = False,
-                            interpret: bool = False):
+                            interpret: bool = False,
+                            kv_block: int | None = None,
+                            head_block: int | None = None):
     """q [B, Q, Hq, D]; k_pages/v_pages [P, page, Hkv, D];
     block_tables [B, pages_per_seq] i32; q_start/q_lens [B] i32
     -> [B, Q, Hq, D].
@@ -230,7 +304,8 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, q_start,
     with m/l [B, Q, Hq] f32 per query row, enabling the exact
     cross-shard softmax merge (fully-masked rows report ``m = NEG_INF``
     — a finite, hugely negative sentinel — so merge weights vanish
-    without NaNs).
+    without NaNs). ``kv_block``/``head_block`` tile exactly as in
+    ``paged_attention``.
     """
     B, Q, Hq, D = q.shape
     num_pages, page, Hkv, _ = k_pages.shape
@@ -238,11 +313,32 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, q_start,
     pages_per_seq = block_tables.shape[1]
     if pos_stride is None:
         pos_stride = page
-    grid = (B, Hkv, pages_per_seq)
+    kv_block, head_block = _resolve(
+        "paged_prefill_attention", kv_block, head_block, page=page,
+        Hkv=Hkv, dims=dict(B=B, Q=Q, Hq=Hq, Hkv=Hkv, D=D, page=page,
+                           pps=pages_per_seq))
+    if head_block < Hkv:
+        parts = [paged_prefill_attention(
+            q[:, :, h0 * G:(h0 + head_block) * G],
+            k_pages[:, :, h0:h0 + head_block],
+            v_pages[:, :, h0:h0 + head_block],
+            block_tables, q_start, q_lens, pos_stride=pos_stride,
+            pos_offset=pos_offset, return_stats=return_stats,
+            interpret=interpret, kv_block=kv_block,
+            head_block=head_block)
+            for h0 in range(0, Hkv, head_block)]
+        if return_stats:
+            return tuple(jnp.concatenate([p[i] for p in parts], axis=2)
+                         for i in range(3))
+        return jnp.concatenate(parts, axis=2)
+    bpp = page // kv_block
+    total_steps = pages_per_seq * bpp
+    grid = (B, Hkv, total_steps)
     kernel = functools.partial(
-        _fused_kernel, page=page, pages_per_seq=pages_per_seq,
-        scale=1.0 / math.sqrt(D), pos_stride=pos_stride,
-        pos_offset=pos_offset, stats=return_stats, Q=Q, G=G)
+        _fused_kernel, kv_block=kv_block, bpp=bpp,
+        total_steps=total_steps, scale=1.0 / math.sqrt(D),
+        pos_stride=pos_stride, pos_offset=pos_offset,
+        stats=return_stats, Q=Q, G=G)
     # [B, Q, (Hkv, G), D] -> [B, Hkv, G*Q, D]: rows are (g, t), t minor,
     # so the kernel recovers the token index as row % Q
     qg = jnp.moveaxis(q.reshape(B, Q, Hkv, G, D), 1, 3) \
@@ -262,10 +358,12 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, q_start,
         in_specs=[
             pl.BlockSpec((1, 1, G * Q, D),
                          lambda b, h, p, bt, qs, ql: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, p, bt, qs, ql: (bt[b, p], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, p, bt, qs, ql: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, kv_block, 1, D),
+                         lambda b, h, p, bt, qs, ql:
+                         (bt[b, p // bpp], p % bpp, h, 0)),
+            pl.BlockSpec((1, kv_block, 1, D),
+                         lambda b, h, p, bt, qs, ql:
+                         (bt[b, p // bpp], p % bpp, h, 0)),
         ],
         out_specs=out_specs,
         scratch_shapes=[

@@ -161,6 +161,19 @@ class PagedPool:
         s.length = min(s.length, length)
         return freed
 
+    def rollback(self, seq_id: str, length: int) -> None:
+        """Logical rollback of rejected speculative writes (DESIGN.md
+        §16): clamp the sequence's token length back to ``length``
+        without touching pages. Draft KV landed beyond ``length`` is
+        garbage the attention mask never reads (seq_lens derive from
+        the committed ``kv_len``), the next round's writes overwrite
+        the same slots, and ``trim`` at turn close reclaims any whole
+        trailing pages the final length doesn't need — so rollback is
+        O(1) and conservation holds by the same page-state partition
+        the invariant checker already enforces."""
+        s = self.seq(seq_id)
+        s.length = min(s.length, length)
+
     def release(self, seq_id: str) -> Dict[str, int]:
         """Drop a sequence's references. Returns an accounting report:
         ``freed_own`` private pages returned to the free list,

@@ -111,6 +111,20 @@ def main() -> None:
                          "host copies (~4x less modeled PCIe per page, "
                          "tolerance-gated quality); fp32 is the "
                          "bit-exact default")
+    ap.add_argument("--spec-decode", type=int, default=None,
+                    metavar="K",
+                    help="live engine: draft up to K tokens per decode "
+                         "slot per round and verify them in the same "
+                         "fused launch (self-speculative prompt-lookup "
+                         "drafts; DESIGN.md §16). Lossless: accepted "
+                         "streams are bit-exact vs K=0. Needs "
+                         "--fused-step; composes with --mesh, "
+                         "--replicas, --prefix-cache, --kv-quant")
+    ap.add_argument("--autotune", default=None, metavar="CACHE.json",
+                    help="live engine: consult (and require) a kernel "
+                         "autotune cache JSON at jit time — build one "
+                         "with benchmarks/autotune_bench.py "
+                         "(DESIGN.md §16)")
     ap.add_argument("--replicas", type=int, default=None,
                     help="live engine: N data-parallel engine replicas "
                          "behind one gateway, with live cross-replica "
@@ -124,7 +138,7 @@ def main() -> None:
                      ("clock_scale", "slots", "kv_pages",
                       "preload_chunks", "replicas", "prefix_cache",
                       "prompt_families", "family_prefix_len",
-                      "kv_quant")
+                      "kv_quant", "spec_decode", "autotune")
                      if getattr(args, f) is not None]
         if live_only:
             ap.error(f"{', '.join(live_only)} only apply to "
@@ -192,6 +206,14 @@ def main() -> None:
         replicas = args.replicas if args.replicas is not None else 1
         if replicas < 1:
             ap.error("--replicas must be >= 1")
+        spec_decode = args.spec_decode if args.spec_decode is not None \
+            else 0
+        if spec_decode < 0:
+            ap.error("--spec-decode must be >= 0")
+        if spec_decode > 0 and not args.fused_step:
+            ap.error("--spec-decode verifies drafts in one fused launch "
+                     "and cannot run on the per-token control plane; "
+                     "drop --no-fused-step (DESIGN.md §16)")
         run_kw = dict(
             policy=policies[system], kind=workload, sessions=sessions,
             barge_in=barge_in, seed=args.seed,
@@ -204,6 +226,8 @@ def main() -> None:
             fused_step=args.fused_step,
             prefix_cache=bool(args.prefix_cache),
             kv_quant=args.kv_quant or "fp32",
+            spec_decode=spec_decode,
+            autotune=args.autotune,
             prompt_families=(args.prompt_families
                              if args.prompt_families is not None else 0),
             family_prefix_len=(args.family_prefix_len

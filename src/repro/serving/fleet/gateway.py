@@ -47,7 +47,11 @@ class FleetGateway(RealtimeGateway):
         self._init_common()
         self.schedulers = [
             build_scheduler(self.cfg.policy, e.monitor, e.kv.occupancy,
-                            chunk=self.sched_chunk(), sc=self.cfg.sched)
+                            chunk=self.sched_chunk(),
+                            decode_chunk=max(1, min(
+                                1 + getattr(e, "spec_decode", 0),
+                                self.cfg.round_token_budget)),
+                            sc=self.cfg.sched)
             for e in replicas]
         self.scheduler = self.schedulers[0]   # hold-wake estimates
         self.router = SessionRouter(

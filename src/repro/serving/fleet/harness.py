@@ -37,6 +37,9 @@ def build_fleet_gateway(*, replicas: int = 3, policy: str = "liveserve",
                         fused_step: bool = True,
                         prefix_cache: bool = False,
                         kv_quant: str = "fp32",
+                        spec_decode: int = 0,
+                        proposer=None,
+                        autotune: Optional[str] = None,
                         interconnect_gb_s: float = 50.0,
                         mitigator: Optional[StragglerMitigator] = None,
                         strike_threshold: int = 3,
@@ -48,6 +51,9 @@ def build_fleet_gateway(*, replicas: int = 3, policy: str = "liveserve",
     composes — every replica shards its page store over the same mesh
     (DESIGN.md §9 inside §12)."""
     from repro.serving.paged_engine import PagedRealtimeEngine
+    if autotune:
+        from repro.kernels import autotune as at
+        at.enable(autotune)
     cfg, params = model if model is not None else tiny_model(seed)
     clock = ScaledWallClock(scale)
     engines = [
@@ -58,7 +64,9 @@ def build_fleet_gateway(*, replicas: int = 3, policy: str = "liveserve",
                             transfer_chunks_per_round=preload_chunks,
                             fused_step=fused_step,
                             prefix_cache=prefix_cache,
-                            kv_quant=kv_quant)
+                            kv_quant=kv_quant,
+                            spec_decode=spec_decode,
+                            proposer=proposer)
         for _ in range(replicas)]
     # one warm-up warms the fleet: replicas share the jitted step
     # through the config-keyed cache

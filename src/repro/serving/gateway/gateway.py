@@ -105,16 +105,21 @@ class SessionHandle:
 
 
 def build_scheduler(policy: str, monitor, kv_occupancy, *, chunk: int,
+                    decode_chunk: int = 1,
                     sc: Optional[SchedulerConfig] = None):
     """One engine's round scheduler — shared by the asyncio gateway,
     the replay twin, and the fleet gateways (each replica gets its own
-    scheduler over its own monitor/KV pressure)."""
+    scheduler over its own monitor/KV pressure). ``decode_chunk`` > 1
+    turns decode grants into "up to K draft tokens" budgets for the
+    speculative plane (DESIGN.md §16)."""
     if policy == "liveserve":
         return UrgencyScheduler(sc or SchedulerConfig(), monitor,
                                 stage="thinker",
                                 kv_occupancy=kv_occupancy,
-                                prefill_chunk=chunk)
-    return FCFSScheduler(monitor, stage="thinker", prefill_chunk=chunk)
+                                prefill_chunk=chunk,
+                                decode_chunk=decode_chunk)
+    return FCFSScheduler(monitor, stage="thinker", prefill_chunk=chunk,
+                         decode_chunk=decode_chunk)
 
 
 def frame_token_tick(monitor, rec, sid: str, now: float) -> None:
@@ -226,13 +231,20 @@ class RealtimeGateway:
         self._init_common()
         self.scheduler = build_scheduler(
             self.cfg.policy, engine.monitor, engine.kv.occupancy,
-            chunk=self.sched_chunk(), sc=self.cfg.sched)
+            chunk=self.sched_chunk(), decode_chunk=self.decode_chunk(),
+            sc=self.cfg.sched)
 
     def sched_chunk(self) -> int:
         # a prefill chunk larger than the round budget can never be
         # admitted — Algorithm 1's head-of-line break would then hold it
         # (and everything behind it) forever
         return max(1, min(self.cfg.prefill_chunk,
+                          self.cfg.round_token_budget))
+
+    def decode_chunk(self) -> int:
+        # pending token + the engine's draft budget, clamped to the
+        # round budget for the same head-of-line reason as sched_chunk
+        return max(1, min(1 + getattr(self.engine, "spec_decode", 0),
                           self.cfg.round_token_budget))
 
     def _init_common(self) -> None:
@@ -281,6 +293,10 @@ class RealtimeGateway:
             default=0)
         self._metrics.kv_wire_bytes_saved = sum(
             e.transfer.stats.wire_bytes_saved for e in self._engines())
+        for f in ("spec_drafted", "spec_accepted", "spec_rejected",
+                  "spec_rounds"):
+            setattr(self._metrics, f,
+                    sum(getattr(e, f, 0) for e in self._engines()))
         return self._metrics
 
     # ------------------------------------------------------------ records

@@ -53,9 +53,15 @@ def _warm_engine(eng, prefill_chunk: int = 1) -> None:
             jnp.zeros((B,), jnp.int32))
         jax.block_until_ready(out[0])        # scratch-page writes only
         return
+    # a spec engine runs _spec_fn on EVERY fused round, so that is the
+    # executable to warm; drafts also raise the largest decode row to
+    # 1 + spec_decode tokens, so warm that bucket too
+    fn = eng._spec_fn if getattr(eng, "_spec_fn", None) is not None \
+        else eng._fused_fn
+    top = max(prefill_chunk, 1 + getattr(eng, "spec_decode", 0))
     q = 1
     while True:
-        out = eng._fused_fn(
+        out = fn(
             eng.params, jnp.zeros((B, q), jnp.int32),
             jnp.zeros((B, q), jnp.int32), eng.k_pages, eng.v_pages,
             jnp.full((B, eng.pages_per_seq), eng.scratch_page, jnp.int32),
@@ -64,7 +70,7 @@ def _warm_engine(eng, prefill_chunk: int = 1) -> None:
             jnp.tile(jnp.arange(q, dtype=jnp.int32) % eng.page_size,
                      (B, 1)))
         jax.block_until_ready(out[0])        # scratch-page writes only
-        if q >= _q_bucket(prefill_chunk):
+        if q >= _q_bucket(top):
             break
         q *= 2
 
@@ -81,7 +87,10 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                   preload_chunks: int = 1,
                   fused_step: bool = True,
                   prefix_cache: bool = False,
-                  kv_quant: str = "fp32") -> RealtimeGateway:
+                  kv_quant: str = "fp32",
+                  spec_decode: int = 0,
+                  proposer=None,
+                  autotune: Optional[str] = None) -> RealtimeGateway:
     """``mesh``: a ('data','model') jax mesh shards the engine's page
     store over 'model' (DESIGN.md §9) — on a laptop run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
@@ -89,8 +98,15 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
     mesh-agnostic. ``preload_chunks``: transfer chunks each round may
     drain between decode sub-batches (the serve flag of the same name;
     DESIGN.md §10). ``fused_step=False`` serves on the per-token
-    differential-control plane (one launch per token — DESIGN.md §11)."""
+    differential-control plane (one launch per token — DESIGN.md §11).
+    ``spec_decode=K`` drafts up to K tokens per decode slot per round
+    and verifies them in the same fused launch (DESIGN.md §16);
+    ``autotune`` names a kernel-config cache JSON to consult at jit
+    time (``repro.kernels.autotune``)."""
     from repro.serving.paged_engine import PagedRealtimeEngine
+    if autotune:
+        from repro.kernels import autotune as at
+        at.enable(autotune)
     cfg, params = model if model is not None else tiny_model(seed)
     clock = ScaledWallClock(scale)
     eng = PagedRealtimeEngine(cfg, params, slots=slots,
@@ -101,7 +117,9 @@ def build_gateway(*, policy: str = "liveserve", scale: float = 8.0,
                               transfer_chunks_per_round=preload_chunks,
                               fused_step=fused_step,
                               prefix_cache=prefix_cache,
-                              kv_quant=kv_quant)
+                              kv_quant=kv_quant,
+                              spec_decode=spec_decode,
+                              proposer=proposer)
     _warm_engine(eng, min(prefill_chunk, round_token_budget))
     gw = RealtimeGateway(eng, cfg=GatewayConfig(
         policy=policy, audio_per_token_s=audio_per_token_s,

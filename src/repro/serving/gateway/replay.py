@@ -93,13 +93,17 @@ class ReplayGateway:
         sc = self.cfg.sched or SchedulerConfig()
         chunk = max(1, min(self.cfg.prefill_chunk,
                            self.cfg.round_token_budget))
+        dchunk = max(1, min(1 + getattr(engine, "spec_decode", 0),
+                            self.cfg.round_token_budget))
         if self.cfg.policy == "liveserve":
             self.scheduler = UrgencyScheduler(
                 sc, engine.monitor, stage="thinker",
-                kv_occupancy=engine.kv.occupancy, prefill_chunk=chunk)
+                kv_occupancy=engine.kv.occupancy, prefill_chunk=chunk,
+                decode_chunk=dchunk)
         else:
             self.scheduler = FCFSScheduler(
-                engine.monitor, stage="thinker", prefill_chunk=chunk)
+                engine.monitor, stage="thinker", prefill_chunk=chunk,
+                decode_chunk=dchunk)
         self.metrics = Metrics()
         self._recs: Dict[Tuple[str, int], TurnRecord] = {}
         self._pending: Dict[str, _Pending] = {}
@@ -448,6 +452,10 @@ class ReplayGateway:
             default=0)
         self.metrics.kv_wire_bytes_saved = sum(
             e.transfer.stats.wire_bytes_saved for e in self._engines())
+        for f in ("spec_drafted", "spec_accepted", "spec_rejected",
+                  "spec_rounds"):
+            setattr(self.metrics, f,
+                    sum(getattr(e, f, 0) for e in self._engines()))
         return self.metrics
 
 

@@ -79,6 +79,11 @@ class Metrics:
     # scenario-suite fields (DESIGN.md §15) — zero on plain workloads
     tool_pauses: int = 0                   # ToolCallStart events observed
     handoffs: int = 0                      # completed client-requested moves
+    # speculative-decode fields (DESIGN.md §16) — zero at spec_decode=0
+    spec_drafted: int = 0                  # draft tokens fed to verify
+    spec_accepted: int = 0                 # drafts matching the argmax
+    spec_rejected: int = 0                 # drafts rolled back
+    spec_rounds: int = 0                   # verify rounds with >= 1 draft
 
     def ttfps(self):
         return sorted(t.ttfp for t in self.turns if t.ttfp is not None)
@@ -169,6 +174,21 @@ class Metrics:
             return 0.0
         return hit / tot
 
+    def spec_accept_rate(self) -> float:
+        """Fraction of drafted tokens the verify step accepted. Same
+        0.0-not-NaN convention as ``reload_overlap_frac``."""
+        if self.spec_drafted <= 0:
+            return 0.0
+        return self.spec_accepted / self.spec_drafted
+
+    def spec_tokens_per_launch(self) -> float:
+        """Mean committed tokens per speculative verify launch
+        (pending + accepted drafts); 1.0 is the non-spec floor, 0.0
+        when speculation never ran (0.0-not-NaN convention)."""
+        if self.spec_rounds <= 0:
+            return 0.0
+        return (self.spec_rounds + self.spec_accepted) / self.spec_rounds
+
     def summary(self) -> dict:
         tt = self.ttfps()
         rtfs = sorted(t.rtf for t in self.turns if t.rtf is not None)
@@ -206,4 +226,9 @@ class Metrics:
             "tool_pause_reloads": self.tool_pause_reloads(),
             "tool_resume_off_path": self.tool_resume_off_path(),
             "handoffs": self.handoffs,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_rejected": self.spec_rejected,
+            "spec_accept_rate": self.spec_accept_rate(),
+            "spec_tokens_per_launch": self.spec_tokens_per_launch(),
         }

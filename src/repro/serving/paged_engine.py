@@ -118,7 +118,8 @@ def paged_decode_step(cfg, params, tokens, positions, k_pages, v_pages,
 
 def paged_fused_step(cfg, params, tokens, positions, k_pages, v_pages,
                      block_tables, q_start, q_lens, write_pages,
-                     write_slots, *, interpret: bool = False, plane=None):
+                     write_slots, *, interpret: bool = False, plane=None,
+                     spec: bool = False):
     """One fused round: up to Q consecutive tokens per batch row through
     the paged KV store in a single launch (DESIGN.md §11).
 
@@ -126,7 +127,12 @@ def paged_fused_step(cfg, params, tokens, positions, k_pages, v_pages,
     q_start/q_lens [B] i32 (first absolute position / valid tokens per
     row — 0 marks a padding row); k_pages/v_pages [L, P+1, page, Hkv,
     hd]; block_tables [B, pps] i32. Returns (logits [B, V] of each
-    row's *last valid* token, k_pages, v_pages).
+    row's *last valid* token, k_pages, v_pages); with ``spec`` (the
+    speculative verify variant, DESIGN.md §16) the result is (logits,
+    outs [B, Q] i32, k_pages, v_pages) where ``outs[b, t]`` is the
+    argmax after position t — fed tokens are ``[pending, d_1..d_m]``,
+    so ``outs[b, j] == tokens[b, j+1]`` accepts draft j+1, and the
+    committed stream stays exactly the greedy one.
 
     Per layer the whole chunk's K/V is scattered into the pages first,
     then every query token attends causally over history + chunk prefix
@@ -167,10 +173,20 @@ def paged_fused_step(cfg, params, tokens, positions, k_pages, v_pages,
         body, x, (params["layers"], k_pages[npre:], v_pages[npre:]))
     k_pages = jnp.concatenate([k_pages[:npre], kcs]) if npre else kcs
     v_pages = jnp.concatenate([v_pages[:npre], vcs]) if npre else vcs
+    last = jnp.maximum(q_lens - 1, 0)
+    if spec:
+        # the verify step consumes every position's argmax, so the full
+        # [B, Q, V] logits materialize here; per-position unembeds are
+        # independent dot products, so the last-valid slice is the same
+        # values the non-spec step computes (the bit-exactness seam)
+        full = _logits(cfg, params, x)                  # [B, Q, V]
+        outs = jnp.argmax(full, axis=-1).astype(jnp.int32)
+        logits = jnp.take_along_axis(
+            full, last[:, None, None], axis=1)[:, 0]
+        return logits, outs, k_pages, v_pages
     # only each row's last valid token's logits are consumed (the next
     # decode token / first output token); slice before the unembed so
     # the launch never materializes [B, Q, V]
-    last = jnp.maximum(q_lens - 1, 0)
     xl = jnp.take_along_axis(x, last[:, None, None], axis=1)
     return _logits(cfg, params, xl)[:, 0], k_pages, v_pages
 
@@ -187,16 +203,22 @@ _STEP_FN_CACHE_MAX = 8
 
 
 def _jitted_step(cfg, interpret: bool, layout=None, *,
-                 fused: bool = False):
+                 fused: bool = False, spec: bool = False):
+    assert fused or not spec, "spec is a fused-plane variant"
     lkey = None if layout is None else (layout.mesh, layout.kind,
                                         layout.page_size)
-    key = (id(cfg), interpret, lkey, fused)
+    key = (id(cfg), interpret, lkey, fused, spec)
     hit = _STEP_FN_CACHE.pop(key, None)
     if hit is None:
         if layout is None:
             body = paged_fused_step if fused else paged_decode_step
+            if spec:
+                body = functools.partial(body, spec=True)
             fn = jax.jit(functools.partial(body, cfg,
                                            interpret=interpret))
+        elif spec:
+            from repro.distributed.paged import make_sharded_spec_step
+            fn = make_sharded_spec_step(cfg, layout, interpret=interpret)
         elif fused:
             from repro.distributed.paged import make_sharded_fused_step
             fn = make_sharded_fused_step(cfg, layout, interpret=interpret)
@@ -262,7 +284,9 @@ class PagedRealtimeEngine:
                  transfer_chunks_per_round: int = 1,
                  fused_step: bool = True,
                  prefix_cache: bool = False,
-                 kv_quant: str = "fp32"):
+                 kv_quant: str = "fp32",
+                 spec_decode: int = 0,
+                 proposer=None):
         assert cfg.family in ("dense", "moe", "vlm") and cfg.mla is None \
             and cfg.sliding_window is None, \
             "paged engine serves global-attention KV families"
@@ -337,13 +361,33 @@ class PagedRealtimeEngine:
             pending_offload=self.transfer.pending_offload_pages)
         self.preloader = SpeechPreloader(self.kv, self.monitor,
                                          enabled=preload)
+        # speculative multi-token decode (DESIGN.md §16): a decode slot
+        # feeds [pending, d_1..d_K] drafts as one fused row and the
+        # verify launch's per-position argmax accepts the longest
+        # matching prefix — lossless by construction (the committed
+        # stream is exactly the greedy one; spec_decode=0 keeps today's
+        # one-token plane as the bit-exact differential control, the
+        # async_transfers=False pattern).
+        assert spec_decode >= 0
+        assert spec_decode == 0 or fused_step, \
+            "spec_decode verifies drafts in one fused launch; it " \
+            "cannot run on the per-token control plane " \
+            "(fused_step=False)"
+        self.spec_decode = int(spec_decode)
+        self.proposer = None
+        if self.spec_decode > 0:
+            from repro.serving.spec_decode import build_proposer
+            self.proposer = build_proposer(
+                proposer if proposer is not None else "ngram")
         # prefill_chunk clamps to the self-scheduled round budget
-        # (= slots tokens) exactly as the gateway clamps its own — a
-        # bigger chunk could never be admitted (Algorithm 1 head-of-line)
+        # (= slots*(1+K) tokens) exactly as the gateway clamps its own —
+        # a bigger chunk could never be admitted (Algorithm 1
+        # head-of-line); decode grants become "up to 1+K" draft budgets
         self.scheduler = scheduler or UrgencyScheduler(
             SchedulerConfig(), self.monitor, stage="thinker",
             kv_occupancy=self.kv.occupancy,
-            prefill_chunk=max(1, slots))
+            prefill_chunk=max(1, slots),
+            decode_chunk=1 + self.spec_decode)
 
         self.sessions: Dict[str, PagedSession] = {}
         self.slot_state: Dict[int, Optional[PagedSlot]] = {
@@ -358,6 +402,12 @@ class PagedRealtimeEngine:
         self.fused_step = fused_step
         self._fused_fn = _jitted_step(cfg, interpret, self.layout,
                                       fused=True) if fused_step else None
+        # with speculation on, EVERY fused round runs the spec variant
+        # (prefill rows simply ignore the per-position argmaxes) so the
+        # engine compiles one executable family, not two
+        self._spec_fn = _jitted_step(cfg, interpret, self.layout,
+                                     fused=True, spec=True) \
+            if self.spec_decode > 0 else None
         # shared-prefix KV subsystem (DESIGN.md §13): a radix index over
         # committed pages + refcounted attach/COW in the pool.
         # prefix_cache=False keeps today's private-pages behavior as the
@@ -377,6 +427,12 @@ class PagedRealtimeEngine:
         self.fused_launches = 0                # fused-plane step launches
         self.peak_shared_pages = 0             # max pages with refcount>1
         self.cow_copies = 0                    # copy-on-write page copies
+        # speculation accounting (the §16 invariant:
+        # accepted + rejected == drafted, always)
+        self.spec_drafted = 0                  # draft tokens verified
+        self.spec_accepted = 0                 # drafts matching argmax
+        self.spec_rejected = 0                 # drafts rolled back
+        self.spec_rounds = 0                   # verify rows with drafts
         # quality-gate tap: when set, called as logit_tap(sid, logits)
         # for every fed row (fused rows report last-valid-token logits —
         # the ones the argmax commits)
@@ -924,7 +980,7 @@ class PagedRealtimeEngine:
         last token's logits are the first output token."""
         logits = self._run_chunk_rows(
             {slot: (sess.session_id,
-                    np.asarray(prompt, np.int32))})[slot]
+                    np.asarray(prompt, np.int32))})[0][slot]
         sess.kv_len += int(prompt.shape[0])
         sess.token_ids += [int(t) for t in prompt]
         self.clock.tick()
@@ -1198,7 +1254,8 @@ class PagedRealtimeEngine:
             return []
         sched_slots, grants = schedule_round(
             self.scheduler, self.kv, self.clock, self.slot_state, act,
-            self.slots, block_size=self.page_size)
+            self.slots * (1 + self.spec_decode),
+            block_size=self.page_size)
         if not sched_slots:
             return []
         self.run_round(grants)
@@ -1260,8 +1317,23 @@ class PagedRealtimeEngine:
                 # a zero grant is "not scheduled this round" on both
                 # planes — the planes' bit-exactness contract covers
                 # every run_round input, not just scheduler outputs
-                feeds[i] = (s.session_id,
-                            np.asarray([s.pending_token], np.int32))
+                toks = [s.pending_token]
+                if self.spec_decode > 0:
+                    # the grant is an "up to 1+K" draft budget: the
+                    # proposer fills as much of it as it can guess,
+                    # capped so accepted tokens can never overshoot the
+                    # turn's generation cap (frontier/cap accounting
+                    # counts accepted tokens only — §16)
+                    m = min(self.spec_decode, c - 1,
+                            r.max_new_tokens - r.generated - 1)
+                    if m > 0:
+                        if hasattr(self.proposer, "session_id"):
+                            self.proposer.session_id = s.session_id
+                        hist = self.sessions[s.session_id].token_ids \
+                            + [s.pending_token]
+                        toks += [int(t) for t in
+                                 self.proposer.propose(hist, m)[:m]]
+                feeds[i] = (s.session_id, np.asarray(toks, np.int32))
         for i in list(feeds):
             sid, toks = feeds[i]
             sess = self.sessions[sid]
@@ -1296,16 +1368,16 @@ class PagedRealtimeEngine:
             xfer_budget -= self.drain_transfers(1)
         feeds = self._round_feeds(chunks)
         if feeds:
-            out = self._run_chunk_rows(feeds)
+            out, outs = self._run_chunk_rows(feeds)
             for i, (sid, toks) in feeds.items():
                 s = self.slot_state[i]
                 sess = self.sessions[sid]
                 n = len(toks)
-                sess.kv_len += n
-                sess.token_ids += [int(t) for t in toks]
                 r = s.request
-                tok = int(np.argmax(out[i]))
                 if r.phase == Phase.PREFILL:
+                    sess.kv_len += n
+                    sess.token_ids += [int(t) for t in toks]
+                    tok = int(np.argmax(out[i]))
                     r.prefilled += n
                     # same event stream as the per-token plane: one
                     # progress event per intermediate prompt token, and
@@ -1322,7 +1394,37 @@ class PagedRealtimeEngine:
                         sess.turn_stats[-1]["ttft_s"] = \
                             self.clock.now() - sess.turn_arrival
                         events[i].append(("token", tok))
+                    continue
+                # decode: without speculation the row fed exactly
+                # [pending] and emits its one argmax; with it the row
+                # fed [pending, d_1..d_m] and the verify launch's
+                # per-position argmaxes accept the longest matching
+                # draft prefix (the committed stream is exactly the
+                # greedy one — §16)
+                if outs is None:
+                    accepted, emit = 0, [int(np.argmax(out[i]))]
                 else:
+                    row = outs[i]
+                    accepted = 0
+                    while accepted < n - 1 \
+                            and int(toks[accepted + 1]) \
+                            == int(row[accepted]):
+                        accepted += 1
+                    emit = [int(row[j]) for j in range(accepted + 1)]
+                    if n > 1:
+                        self.spec_rounds += 1
+                        self.spec_drafted += n - 1
+                        self.spec_accepted += accepted
+                        self.spec_rejected += (n - 1) - accepted
+                # commit pending + accepted drafts; rejected KV rolls
+                # back (length clamp — pages stay owned, the garbage
+                # slots are never attended and are overwritten before
+                # any future attend; _close_turn's trim reclaims)
+                sess.kv_len += 1 + accepted
+                sess.token_ids += [int(t) for t in toks[:1 + accepted]]
+                if 1 + accepted < n:
+                    self.pool.rollback(sid, sess.kv_len)
+                for tok in emit:
                     r.generated += 1
                     s.pending_token = tok
                     if r.generated < r.max_new_tokens:
@@ -1332,6 +1434,7 @@ class PagedRealtimeEngine:
                         r.state = RequestState.FINISHED
                         self._close_turn(i, aborted=False)
                         events[i].append(("finished", r.generated))
+                        break
         if xfer_budget > 0:
             self.drain_transfers(xfer_budget)
         return events
@@ -1452,12 +1555,13 @@ class PagedRealtimeEngine:
                 self.logit_tap(sid, logits[i])
         return {i: logits[i] for i in feeds}
 
-    def _run_chunk_rows(self, feeds: Dict[int, tuple]) \
-            -> Dict[int, np.ndarray]:
+    def _run_chunk_rows(self, feeds: Dict[int, tuple]) -> tuple:
         """Run one fused step with ``feeds[row] = (sid, tokens)`` —
         up to Q consecutive tokens per row, padded (rows and token
-        slots alike) onto the scratch page. Returns each row's
-        last-valid-token logits."""
+        slots alike) onto the scratch page. Returns
+        ``(logits, outs)``: each row's last-valid-token logits, plus
+        each row's per-position argmaxes when the engine runs the
+        speculative verify variant (None on the non-spec plane)."""
         q_tokens = _q_bucket(max(len(t) for _, t in feeds.values()))
         rows: List[Optional[tuple]] = [None] * self.slots
         tokens = np.zeros((self.slots, q_tokens), np.int32)
@@ -1467,18 +1571,25 @@ class PagedRealtimeEngine:
         tabs: FusedBatchTables = assemble_fused(
             self.pool, rows, q_tokens, self.pages_per_seq,
             self.scratch_page)
-        logits, self.k_pages, self.v_pages = self._fused_fn(
-            self.params, jnp.asarray(tokens),
-            jnp.asarray(tabs.positions), self.k_pages, self.v_pages,
-            jnp.asarray(tabs.block_tables), jnp.asarray(tabs.q_start),
-            jnp.asarray(tabs.q_lens), jnp.asarray(tabs.write_pages),
-            jnp.asarray(tabs.write_slots))
+        args = (self.params, jnp.asarray(tokens),
+                jnp.asarray(tabs.positions), self.k_pages, self.v_pages,
+                jnp.asarray(tabs.block_tables), jnp.asarray(tabs.q_start),
+                jnp.asarray(tabs.q_lens), jnp.asarray(tabs.write_pages),
+                jnp.asarray(tabs.write_slots))
+        if self._spec_fn is not None:
+            logits, outs, self.k_pages, self.v_pages = \
+                self._spec_fn(*args)
+            outs = np.asarray(outs)
+            out_rows = {i: outs[i] for i in feeds}
+        else:
+            logits, self.k_pages, self.v_pages = self._fused_fn(*args)
+            out_rows = None
         self.fused_launches += 1
         logits = np.asarray(logits)
         if self.logit_tap is not None:
             for i, (sid, _) in feeds.items():
                 self.logit_tap(sid, logits[i])
-        return {i: logits[i] for i in feeds}
+        return {i: logits[i] for i in feeds}, out_rows
 
     def _close_turn(self, slot: int, *, aborted: bool) -> None:
         s = self.slot_state[slot]

@@ -1,0 +1,440 @@
+"""Speculative multi-token decode (DESIGN.md §16, ISSUE 10).
+
+Covers the speculation invariants:
+- proposer units (prompt-lookup n-gram drafting, scripted oracle,
+  draft-model config hook);
+- losslessness: accepted-token streams are bit-exact vs the
+  ``spec_decode=0`` control — deterministic sweep plus a hypothesis
+  property over random draft budgets / barge rounds / evictions, and
+  a mesh-sharded twin (multidev lane);
+- acceptance accounting: ``accepted + rejected == drafted`` under
+  forced full rejection and forced partial acceptance;
+- KV rollback conservation: no leaked or orphaned pages after
+  rejection, including shared-prefix (prefix-cache) sessions;
+- generation-budget and frontier-cap correctness under speculation
+  (only *accepted* tokens count).
+
+Barge-in comparison protocol: a mid-decode barge lands at a round
+boundary, and a spec round commits up to ``1 + K`` tokens — so the
+spec plane and the one-token control reach a given emitted-token count
+at different rounds (and a spec round can overshoot it). The
+differential therefore runs the spec plane first (barging once the
+turn has emitted ``barge_emit`` tokens, wherever acceptance actually
+lands it), reads how many tokens the aborted turn had emitted, and
+replays the control barging at exactly that count — exact, because the
+control emits at most one token per round. Identical committed context
+⇒ every later turn must match bit for bit.
+"""
+import jax
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.configs import get_config, reduced
+from repro.core.session import Phase
+from repro.models import init_params
+from repro.serving.paged_engine import PagedRealtimeEngine
+from repro.serving.spec_decode import (DraftModelConfig, NGramProposer,
+                                       ScriptedProposer, build_proposer)
+
+NDEV = len(jax.devices())
+multidev = pytest.mark.skipif(
+    NDEV < 2,
+    reason="needs >1 device; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                  vocab=331)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ======================================================================
+# proposer units
+# ======================================================================
+def test_ngram_replays_periodic_history():
+    p = NGramProposer(max_ngram=3)
+    h = [1, 2, 3] * 3
+    assert p.propose(h, 3) == [1, 2, 3]
+    assert p.propose(h, 5) == [1, 2, 3, 1, 2]
+
+
+def test_ngram_prefers_full_continuation():
+    # the most recent occurrence of the trailing n-gram sits too close
+    # to the end to fill the budget; an older one does
+    p = NGramProposer(max_ngram=2)
+    h = [1, 2, 3, 4, 9, 1, 2]
+    assert p.propose(h, 3) == [3, 4, 9]
+
+
+def test_ngram_no_match_degrades_to_empty():
+    p = NGramProposer()
+    assert p.propose([1, 2, 3, 4, 5], 4) == []
+    assert p.propose([7], 4) == []          # history too short
+    assert p.propose([1, 2, 1, 2], 0) == []
+
+
+def test_scripted_proposer_cursor_and_budget():
+    p = ScriptedProposer({"a": [[5, 6, 7], [8]]})
+    p.session_id = "a"
+    assert p.propose([0], 2) == [5, 6]      # clipped to the budget
+    assert p.propose([0], 4) == [8]
+    assert p.propose([0], 4) == []          # script exhausted
+    p.session_id = "b"
+    assert p.propose([0], 4) == []          # unknown session
+
+
+def test_build_proposer_dispatch():
+    assert isinstance(build_proposer("ngram"), NGramProposer)
+    obj = ScriptedProposer()
+    assert build_proposer(obj) is obj
+    with pytest.raises(NotImplementedError):
+        build_proposer(DraftModelConfig(name="toy"))
+    with pytest.raises(AssertionError):
+        build_proposer(42)
+
+
+def test_spec_requires_fused_plane(tiny):
+    cfg, params = tiny
+    with pytest.raises(AssertionError, match="fused"):
+        PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                            pages_per_seq=8, fused_step=False,
+                            spec_decode=2)
+
+
+def _junk_proposer(vocab):
+    """Drafts the model's argmax will (almost surely) never confirm —
+    guaranteed drafting every decode round, every draft rejected: the
+    rollback path runs constantly while the committed stream must stay
+    exactly greedy."""
+
+    class _Junk:
+        session_id = None
+
+        def propose(self, history, k):
+            return [(int(history[-1]) + 1 + i) % vocab for i in range(k)]
+
+    return _Junk()
+
+
+# ======================================================================
+# differential drives
+# ======================================================================
+def _drive(cfg, params, seed, *, spec, proposer=None, mesh=None,
+           max_chunk=4, barge_emit=None, evict_pages=4,
+           prefix_cache=False):
+    """One seeded multi-turn trace: chunked prefill, decode with random
+    grants (the spec plane's decode grants carry the draft budget on
+    top), an optional mid-decode barge on turn 2, physical evict +
+    reload across a turn boundary. The full interaction script (prompts,
+    budgets) is pre-drawn so the two planes replay identical traffic
+    even though their round counts differ. Returns (per-session token
+    histories, per-slot client event streams, turn stats, evicted-page
+    count, engine)."""
+    rng = np.random.default_rng(seed)
+    grng = np.random.default_rng(seed + 7777)   # grants only
+    # periodic prompts so prompt-lookup drafting has material
+    unit = rng.integers(0, cfg.vocab_size, size=3)
+    pa = np.tile(unit, 4)
+    pb = rng.integers(0, cfg.vocab_size, size=int(rng.integers(5, 10)))
+    mna = int(rng.integers(6, 10))
+    mnb = int(rng.integers(4, 8))
+    pa2 = np.tile(unit, 3)
+    pa3 = rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 7)))
+    mna3 = int(rng.integers(3, 6))
+
+    eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                              pages_per_seq=16, num_pages=32, mesh=mesh,
+                              fused_step=True, spec_decode=spec,
+                              proposer=proposer,
+                              prefix_cache=prefix_cache)
+    events = {}
+
+    def emitted_of_a():
+        """Tokens the live turn of "a" has emitted so far (the
+        prefill-completion token plus accepted decode emissions) —
+        None once the turn closed."""
+        s = next((s for s in eng.slot_state.values()
+                  if s is not None and s.session_id == "a"), None)
+        return len(s.tokens) if s is not None else None
+
+    def drive(live, barge=False):
+        rounds = 0
+        while eng.active() and rounds < 500:
+            grants = {}
+            for slot, sid in list(live.items()):
+                s = eng.slot_state[slot]
+                if s is None or s.session_id != sid \
+                        or not s.request.is_live():
+                    continue
+                g = int(grng.integers(1, max_chunk + 1))
+                if s.request.phase == Phase.DECODE:
+                    g += spec               # grant carries draft budget
+                grants[slot] = g
+            if not grants:
+                break
+            for slot, evs in eng.run_round(grants).items():
+                # ("prefill", n) progress markers track the random
+                # grant chunking, which legitimately differs once the
+                # planes' round counts diverge; the client contract is
+                # the token/finished stream
+                events.setdefault(slot, []).extend(
+                    e for e in evs if e[0] != "prefill")
+            rounds += 1
+            if barge and barge_emit is not None:
+                e = emitted_of_a()
+                if e is not None and e >= barge_emit:
+                    eng.barge_in("a")
+                    return
+
+    sa = eng.submit_turn("a", pa, max_new_tokens=mna)
+    sb = eng.submit_turn("b", pb, max_new_tokens=mnb)
+    drive({sa: "a", sb: "b"})
+    # physical offload of committed suffix pages across the turn gap
+    evicted = eng.kv.evict(evict_pages, eng.clock.now())
+    eng.flush_transfers()
+    sa2 = eng.submit_turn("a", pa2, max_new_tokens=10)
+    drive({sa2: "a"}, barge=True)
+    # turn 3 resumes on exactly the committed (post-barge) tokens
+    sa3 = eng.submit_turn("a", pa3, max_new_tokens=mna3)
+    drive({sa3: "a"})
+    eng.check_invariants()
+    assert eng.spec_accepted + eng.spec_rejected == eng.spec_drafted
+    hist = {sid: s.history for sid, s in eng.sessions.items()}
+    stats = {sid: [(t["re_prefill_tokens"], t["generated"], t["aborted"])
+                   for t in s.turn_stats]
+             for sid, s in eng.sessions.items()}
+    return hist, events, stats, evicted, eng
+
+
+def _differential(cfg, params, seed, *, spec, proposer=None, mesh=None,
+                  max_chunk=4, barge_emit=2, evict_pages=4,
+                  prefix_cache=False):
+    """Run the spec plane, then replay the control barging at the exact
+    emitted-token point the spec run aborted at (see module docstring).
+    Returns (control, spec) drive results after asserting equality."""
+    got = _drive(cfg, params, seed, spec=spec, proposer=proposer,
+                 mesh=mesh, max_chunk=max_chunk, barge_emit=barge_emit,
+                 evict_pages=evict_pages, prefix_cache=prefix_cache)
+    aborted = got[2]["a"][1][2]
+    emitted = len(got[0]["a"][1]) if aborted else None
+    want = _drive(cfg, params, seed, spec=0, max_chunk=max_chunk,
+                  barge_emit=emitted, evict_pages=evict_pages,
+                  prefix_cache=prefix_cache)
+    assert got[0] == want[0], "token histories diverged"
+    assert got[1] == want[1], "client-visible event streams diverged"
+    assert got[2] == want[2], "turn stats diverged"
+    assert got[3] == want[3], "offloadable-page sets diverged"
+    return want, got
+
+
+SWEEP = [(0, 2), (1, 4), (2, 1), (3, 4), (4, 3)]
+
+
+@pytest.mark.parametrize("seed,spec", SWEEP)
+def test_spec_stream_bit_exact_sweep(tiny, seed, spec):
+    """Forced-rejection drafting (junk proposer): every decode round
+    drafts, every draft rolls back, and the committed streams / events /
+    turn stats stay bit-exact vs the spec_decode=0 control."""
+    cfg, params = tiny
+    _, got = _differential(cfg, params, seed, spec=spec,
+                           proposer=_junk_proposer(cfg.vocab_size))
+    eng = got[4]
+    assert eng.spec_drafted > 0, "trace never drafted"
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_spec_ngram_stream_bit_exact(tiny, seed):
+    """The default self-speculative proposer (whatever it drafts, and
+    whatever sticks) is lossless on the same traces."""
+    cfg, params = tiny
+    _differential(cfg, params, seed, spec=4)
+
+
+@pytest.mark.slow
+@given(seed=st.integers(0, 2 ** 16), spec=st.integers(1, 5),
+       barge_emit=st.integers(1, 8), evict_pages=st.integers(2, 8),
+       max_chunk=st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_spec_stream_property(tiny, seed, spec, barge_emit,
+                              evict_pages, max_chunk):
+    cfg, params = tiny
+    _differential(cfg, params, seed, spec=spec,
+                  proposer=_junk_proposer(cfg.vocab_size),
+                  barge_emit=barge_emit, evict_pages=evict_pages,
+                  max_chunk=max_chunk)
+
+
+@multidev
+@pytest.mark.parametrize("shape", [(1, 2), (1, 8)])
+def test_spec_sharded_stream_bit_exact(tiny, shape):
+    """The mesh-sharded spec verify step stays token-exact with the
+    single-device spec_decode=0 control."""
+    if shape[0] * shape[1] > NDEV:
+        pytest.skip(f"mesh {shape} > {NDEV} devices")
+    cfg, params = tiny
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    _, got = _differential(cfg, params, 13, spec=3,
+                           proposer=_junk_proposer(cfg.vocab_size),
+                           mesh=mesh)
+    assert got[4].spec_drafted > 0
+
+
+# ======================================================================
+# rollback conservation + partial acceptance
+# ======================================================================
+def test_spec_rejection_rolls_back_and_conserves_pages(tiny):
+    cfg, params = tiny
+    prompt = np.random.default_rng(5).integers(0, cfg.vocab_size, size=7)
+
+    def run(spec, proposer=None):
+        eng = PagedRealtimeEngine(cfg, params, slots=2, page_size=4,
+                                  pages_per_seq=8, num_pages=24,
+                                  fused_step=True, spec_decode=spec,
+                                  proposer=proposer)
+        free0 = eng.pool.free_pages
+        eng.add_session("a", prompt, max_new_tokens=9)
+        eng.run_to_completion()
+        eng.check_invariants()
+        hist = eng.sessions["a"].history
+        held = len(eng.pool.seq("a").pages)
+        eng.end_session("a")
+        eng.check_invariants()
+        return eng, free0, hist, held
+
+    eng, free0, hist, held = run(4, _junk_proposer(cfg.vocab_size))
+    assert eng.spec_rejected > 0, "junk drafts were never rejected"
+    assert eng.spec_accepted + eng.spec_rejected == eng.spec_drafted
+    # every draft page rolled back / trimmed: ending the session returns
+    # the pool to its starting population (no leaked, no orphaned pages)
+    assert eng.pool.free_pages == free0
+    _, _, want, held0 = run(0)
+    # the committed stream is untouched by the rejected drafts, and the
+    # spec session holds exactly what the committed tokens need (draft
+    # lookahead pages were reclaimed at turn close)
+    assert hist == want
+    assert held == held0
+
+
+def test_spec_partial_acceptance_accounting(tiny):
+    """A proposer whose first draft token is right and second is wrong
+    forces partial acceptance every round; the counters must balance
+    exactly and generation stops exactly at max_new_tokens."""
+    cfg, params = tiny
+    prompt = np.random.default_rng(8).integers(0, cfg.vocab_size, size=6)
+
+    # control run discovers the greedy stream
+    eng0 = PagedRealtimeEngine(cfg, params, slots=1, page_size=4,
+                               pages_per_seq=8, fused_step=True)
+    eng0.add_session("a", prompt, max_new_tokens=8)
+    eng0.run_to_completion()
+    # history is a list of per-turn emitted-token segments; greedy[0]
+    # is the prefill-completion token the first decode round's history
+    # already carries as pending
+    greedy = list(eng0.sessions["a"].history[-1])
+
+    class _HalfRight:
+        session_id = None
+
+        def __init__(self, prompt_len, stream, vocab):
+            self.p, self.s, self.v = prompt_len, stream, vocab
+
+        def propose(self, history, k):
+            g = len(history) - self.p       # tokens emitted so far
+            good = self.s[g:g + 1]
+            if not good or k < 2:
+                return good
+            return [good[0], (good[0] + 1) % self.v]
+
+    eng = PagedRealtimeEngine(
+        cfg, params, slots=1, page_size=4, pages_per_seq=8,
+        fused_step=True, spec_decode=3,
+        proposer=_HalfRight(len(prompt), greedy, cfg.vocab_size))
+    eng.add_session("a", prompt, max_new_tokens=8)
+    eng.run_to_completion()
+    eng.check_invariants()
+    assert eng.sessions["a"].history == eng0.sessions["a"].history
+    assert eng.spec_accepted + eng.spec_rejected == eng.spec_drafted
+    assert eng.spec_rejected > 0 and eng.spec_accepted > 0
+    assert eng.sessions["a"].turn_stats[-1]["generated"] == 8
+
+
+def test_spec_with_prefix_cache_shared_pages(tiny):
+    """Speculative drafts with the radix prefix cache live: a second
+    session attaching the first one's banked prefix pages decodes (and
+    drafts) without perturbing them — streams stay exact vs the
+    non-spec control, conservation and the cache charging partition
+    hold, and both planes end holding identical pool populations."""
+    cfg, params = tiny
+    fam = np.tile(np.random.default_rng(11).integers(
+        0, cfg.vocab_size, size=4), 3)
+
+    def run(spec):
+        eng = PagedRealtimeEngine(
+            cfg, params, slots=2, page_size=4, pages_per_seq=8,
+            num_pages=32, fused_step=True, prefix_cache=True,
+            spec_decode=spec,
+            proposer=_junk_proposer(cfg.vocab_size) if spec else None)
+        eng.add_session("a", fam, max_new_tokens=6)
+        eng.run_to_completion()
+        # same family prefix: attaches to a's banked pages
+        eng.add_session("b", fam, max_new_tokens=6)
+        eng.run_to_completion()
+        eng.check_invariants()
+        assert eng.prefix_cache.hit_tokens > 0, "prefix never shared"
+        hists = (eng.sessions["a"].history, eng.sessions["b"].history)
+        eng.end_session("a")
+        eng.end_session("b")
+        eng.check_invariants()
+        return hists, eng.pool.free_pages, eng
+
+    want, free_want, _ = run(0)
+    got, free_got, eng = run(3)
+    assert got == want
+    assert free_got == free_want
+    assert eng.spec_rejected > 0
+    assert eng.spec_accepted + eng.spec_rejected == eng.spec_drafted
+
+
+# ======================================================================
+# budgets and the frontier cap count accepted tokens only
+# ======================================================================
+def test_spec_never_overruns_generation_budget(tiny):
+    """Draft budgets clamp so a verify round can never emit past
+    max_new_tokens, whatever the acceptance pattern."""
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    prompt = np.tile(rng.integers(0, cfg.vocab_size, size=3), 3)
+    for max_new in (1, 2, 5):
+        for prop in (None, _junk_proposer(cfg.vocab_size)):
+            eng = PagedRealtimeEngine(cfg, params, slots=1, page_size=4,
+                                      pages_per_seq=8, fused_step=True,
+                                      spec_decode=4, proposer=prop)
+            eng.add_session("a", prompt, max_new_tokens=max_new)
+            eng.run_to_completion()
+            eng.check_invariants()
+            stats = eng.sessions["a"].turn_stats[-1]
+            assert stats["generated"] == max_new, (max_new, stats)
+
+
+def test_frontier_cap_counts_accepted_tokens_only(tiny):
+    """Gateway frontier invariant under speculation: the playback
+    buffer advances only on emitted (= accepted) tokens, so the worst
+    over-frontier excursion is bounded by one round's accepted emission
+    — decode_chunk = 1 + K tokens — never by drafted tokens."""
+    from repro.serving.gateway.harness import run_gateway_workload
+    cfg, params = tiny
+    apt = 0.25
+    m, gw = run_gateway_workload(
+        policy="liveserve", kind="interactive", sessions=3,
+        barge_in=0.0, seed=4, scale=16.0, model=(cfg, params),
+        spec_decode=4, round_token_budget=16, audio_per_token_s=apt,
+        frontier_cap_s=2.0, max_response=14, timeout_s=300)
+    s = m.summary()
+    assert s["spec_accepted"] + s["spec_rejected"] == s["spec_drafted"]
+    assert gw.max_over_frontier_s <= (1 + 4) * apt + 1e-6
+    for eng in gw._engines():
+        eng.check_invariants()
